@@ -1,0 +1,122 @@
+"""Paper reproduction benchmarks (one per results figure/table).
+
+Figures 7-10: electronic DCNs, energy + completion vs shuffle volume.
+Figures 11-14: same with skewed map outputs.
+Figures 15-16: PON3/PON5 with and without skew.
+Table I:       AWGR wavelength assignment (run via --full, ~90 s).
+
+Solves use the lexicographic oracle (exact primaries; see
+core.oracle.solve_lexico) plus the JAX fast path for the gap table.
+Default volumes are reduced for CI speed; --full uses the paper's
+1-120 Gbit sweep with 10x6 task placement.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import numpy as np
+
+from repro.core import oracle, solver, timeslot, topology, traffic
+
+RESULTS = pathlib.Path(__file__).resolve().parents[1] / "results" / "paper"
+
+ELECTRONIC = ["spine-leaf", "fat-tree", "bcube", "dcell"]
+PON = ["pon3", "pon5"]
+
+
+def run_sweep(topos, volumes, *, skew=False, rho=8.0, n_map=10, n_reduce=6,
+              seed=0, time_limit=120.0, fast_iters=4000, tag=""):
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    rows = []
+    for name in topos:
+        topo = topology.build(name)
+        T = 6
+        for vol in volumes:
+            cf = traffic.shuffle_traffic(topo, vol, n_map=n_map,
+                                         n_reduce=n_reduce, skew=skew,
+                                         seed=seed)
+            prob = timeslot.ScheduleProblem(topo, cf, n_slots=T, rho=rho)
+            for obj in ("energy", "time"):
+                t0 = time.time()
+                try:
+                    orc = oracle.solve_lexico(prob, obj,
+                                              time_limit=time_limit)
+                    om = orc.metrics
+                    ogap = orc.mip_gap
+                except Exception as e:                 # time-limit etc.
+                    om, ogap = None, float("nan")
+                t_oracle = time.time() - t0
+                t0 = time.time()
+                fp = solver.solve_fast(prob, obj, iters=fast_iters)
+                t_fast = time.time() - t0
+                row = {
+                    "topology": name, "volume_gbit": vol, "skew": skew,
+                    "rho": rho, "objective": obj,
+                    "oracle_energy_j": om.energy_j if om else None,
+                    "oracle_completion_s": om.completion_s if om else None,
+                    "oracle_gap": ogap, "oracle_seconds": t_oracle,
+                    "fast_energy_j": fp.metrics.energy_j,
+                    "fast_completion_s": fp.metrics.completion_s,
+                    "fast_feasible": bool(fp.metrics.feasible),
+                    "fast_seconds": t_fast,
+                }
+                rows.append(row)
+    out = RESULTS / f"sweep_{tag or 'default'}.json"
+    out.write_text(json.dumps(rows, indent=1))
+    return rows
+
+
+def print_rows(rows, bench: str):
+    for r in rows:
+        us = r["oracle_seconds"] * 1e6
+        e = r["oracle_energy_j"]
+        m = r["oracle_completion_s"]
+        print(f"{bench}/{r['topology']}/{r['objective']}/v{r['volume_gbit']:g}"
+              f"{'/skew' if r['skew'] else ''},{us:.0f},"
+              f"E={e if e is None else round(e, 1)};"
+              f"M={m if m is None else round(m, 4)};"
+              f"fastE={r['fast_energy_j']:.1f};fastM={r['fast_completion_s']:.4f}")
+
+
+def figs_7_to_10(volumes=(2.0, 8.0), n_map=4, n_reduce=3, **kw):
+    return run_sweep(ELECTRONIC, volumes, n_map=n_map, n_reduce=n_reduce,
+                     tag="electronic", **kw)
+
+
+def figs_11_to_14(volumes=(8.0,), n_map=4, n_reduce=3, **kw):
+    return run_sweep(ELECTRONIC, volumes, skew=True, n_map=n_map,
+                     n_reduce=n_reduce, tag="electronic_skew", **kw)
+
+
+def figs_15_16(volumes=(2.0, 8.0), n_map=4, n_reduce=3, **kw):
+    a = run_sweep(PON, volumes, n_map=n_map, n_reduce=n_reduce,
+                  tag="pon", **kw)
+    b = run_sweep(PON, volumes[-1:], skew=True, n_map=n_map,
+                  n_reduce=n_reduce, tag="pon_skew", **kw)
+    return a + b
+
+
+def rate_comparison(volumes=(8.0,), n_map=4, n_reduce=3, **kw):
+    """rho = 2.8 vs 8 Gbps (paper §VI-A energy trend)."""
+    rows = []
+    for rho in (2.8, 8.0):
+        rows += run_sweep(["spine-leaf"], volumes, rho=rho, n_map=n_map,
+                          n_reduce=n_reduce, tag=f"rate{rho}", **kw)
+    return rows
+
+
+def table_1():
+    from repro.core import wavelength
+    t0 = time.time()
+    sol = wavelength.solve(wavelength.CellDesign(), time_limit=300)
+    dt = time.time() - t0
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    (RESULTS / "table1_wavelengths.json").write_text(json.dumps({
+        "achieved": sol.achieved, "lambda": sol.lam.tolist(),
+        "hops": sol.hops.tolist(), "integral": sol.integral,
+        "seconds": dt}, indent=1))
+    print(f"table1/awgr_wavelengths,{dt*1e6:.0f},"
+          f"achieved={sol.achieved};target=20;integral={sol.integral}")
+    return sol

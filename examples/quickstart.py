@@ -1,0 +1,29 @@
+"""Quickstart: the paper's co-flow scheduler end-to-end in ~40 lines.
+
+Builds the PON3 (AWGR-centric) cell and a spine-leaf DCN, schedules the
+same MapReduce shuffle on both with each objective, and prints the
+energy/completion-time trade-off the paper's §VI reports.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core import oracle, solver, timeslot, topology, traffic
+
+TOTAL_GBITS = 8.0
+
+for name in ("spine-leaf", "pon3"):
+    topo = topology.build(name)
+    coflow = traffic.shuffle_traffic(topo, TOTAL_GBITS, n_map=4, n_reduce=3,
+                                     seed=1)
+    prob = timeslot.ScheduleProblem(topo, coflow, n_slots=6, rho=8.0)
+    print(f"\n=== {name}: {coflow.n_flows} flows, "
+          f"{coflow.total_gbits:g} Gbit shuffle ===")
+    for objective in ("time", "energy"):
+        exact = oracle.solve_lexico(prob, objective, time_limit=120)
+        fast = solver.solve_fast(prob, objective, iters=4000)
+        em, fm = exact.metrics, fast.metrics
+        print(f"  min-{objective:6s}  oracle: M={em.completion_s:.3f}s "
+              f"E={em.energy_j:7.1f}J   |   fast path: "
+              f"M={fm.completion_s:.3f}s E={fm.energy_j:7.1f}J "
+              f"(feasible={fm.feasible})")
+print("\nPON3 vs electronic: note the ~an-order-of-magnitude energy gap "
+      "at min-energy — the paper's §VI-B headline.")

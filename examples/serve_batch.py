@@ -1,0 +1,12 @@
+"""Batched serving example: prefill + decode with KV caches on the
+RecurrentGemma hybrid (constant-memory recurrent state + windowed
+attention), plus a dense model for contrast.
+
+Run:  PYTHONPATH=src python examples/serve_batch.py
+"""
+from repro.launch import serve
+
+for arch in ("recurrentgemma-2b", "gemma2-27b"):
+    print(f"\n=== {arch} (smoke config) ===")
+    serve.main(["--arch", arch, "--smoke", "--batch", "2",
+                "--prompt-len", "48", "--gen", "12"])

@@ -1,0 +1,22 @@
+"""The paper's contribution: time-slotted co-flow scheduling + routing.
+
+  topology    - the six paper DCN graphs (Figs. 4-5, Table II)
+  traffic     - MapReduce shuffle co-flow model (§IV-B)
+  timeslot    - the time-slotted problem + exact eq.(19)-(45) accounting
+  oracle      - exact MILP (HiGHS), the paper-faithful reference (§V)
+  solver      - JAX PDHG routing LP + slot packing (production fast path)
+  wavelength  - AWGR cell wiring + wavelength assignment MILP (§III)
+  fabric      - TPU ICI adaptation: collective slot plans for training
+"""
+from . import fabric, oracle, solver, timeslot, topology, traffic, wavelength
+from .fabric import Bucket, FabricSpec, SlotPlan, plan_collectives, v5e_fabric
+from .timeslot import Metrics, ScheduleProblem, evaluate
+from .topology import Topology, build as build_topology
+from .traffic import CoflowSet, shuffle_traffic
+
+__all__ = [
+    "Bucket", "CoflowSet", "FabricSpec", "Metrics", "ScheduleProblem",
+    "SlotPlan", "Topology", "build_topology", "evaluate", "fabric", "oracle",
+    "plan_collectives", "shuffle_traffic", "solver", "timeslot", "topology",
+    "traffic", "v5e_fabric", "wavelength",
+]

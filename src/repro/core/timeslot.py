@@ -1,0 +1,191 @@
+"""Time-slotted co-flow scheduling problem + exact paper accounting.
+
+This module defines the schedule decision tensors and evaluates any
+candidate schedule with the paper's exact equations:
+
+  * device activity / power:   eqs. (19)-(21)
+  * total energy:              eq. (22)
+  * completion time M:         eqs. (39)-(45)
+  * feasibility:               eqs. (25)-(30), (46), (47)
+
+A schedule is a pair of tensors
+    x[f, e, w, t]  - Gbits of flow f carried on directed edge e,
+                     wavelength w, during slot t
+    (delta[f, t] = net injection is implied: sum of x out of src_f)
+so both solver backends (core.oracle exact MILP, core.solver JAX fast
+path) and any heuristic can be scored identically.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .topology import KIND_SERVER, KIND_SWITCH, Topology
+from .traffic import CoflowSet
+
+TOL = 1e-6
+
+
+@dataclasses.dataclass
+class ScheduleProblem:
+    topo: Topology
+    coflow: CoflowSet
+    n_slots: int                  # |T|
+    rho: float = 8.0              # max egress rate per server, Gbps (Table III)
+    q_weight: float = 100.0       # Q, earliest-slot fairness weight (Table III)
+    # beyond-paper extension (TPU gradient buckets): flow f may not ship
+    # before slot release_slot[f] (0-based).  None = all ready at t=0, which
+    # is the paper's assumption for the shuffle phase.
+    release_slot: np.ndarray | None = None
+
+    def __post_init__(self):
+        t = self.topo
+        self.e_src = t.edges[:, 0].astype(np.int64)
+        self.e_dst = t.edges[:, 1].astype(np.int64)
+        self.is_server = np.array([d.kind == KIND_SERVER for d in t.devices])
+        self.is_switch = np.array([d.kind == KIND_SWITCH for d in t.devices])
+        self.p_max = np.array([d.p_max for d in t.devices])
+        self.eps = np.array([d.eps for d in t.devices])
+        self.sigma = np.array([t.switch_sigma.get(i, np.inf)
+                               for i in range(t.n_vertices)])
+        # flow-edge mask: 1 = flow f may use edge e
+        F, E = self.coflow.n_flows, t.n_edges
+        mask = np.ones((F, E), dtype=bool)
+        src, dst = self.coflow.src, self.coflow.dst
+        u_is_server = self.is_server[self.e_src]
+        v_is_server = self.is_server[self.e_dst]
+        # never re-enter the source / leave the destination
+        mask &= ~(self.e_dst[None, :] == src[:, None])
+        mask &= ~(self.e_src[None, :] == dst[:, None])
+        if t.server_relay:
+            # flows may pass through other servers (BCube/DCell/PON5), but a
+            # transit server must be enterable+exitable; nothing more to mask.
+            pass
+        else:
+            # eq. (46): servers never forward other servers' traffic (PON3)
+            mask &= ~(u_is_server[None, :] & (self.e_src[None, :] != src[:, None]))
+            mask &= ~(v_is_server[None, :] & (self.e_dst[None, :] != dst[:, None]))
+        self.flow_edge_mask = mask
+        # wavelength availability per edge
+        self.edge_w_ok = t.cap > 0.0            # (E, W)
+
+    # -- convenience sizes --------------------------------------------------
+    @property
+    def shape_x(self) -> tuple[int, int, int, int]:
+        return (self.coflow.n_flows, self.topo.n_edges,
+                self.topo.n_wavelengths, self.n_slots)
+
+    @property
+    def slot_cap_gbits(self) -> np.ndarray:
+        """(E, W) capacity in Gbits per slot: C_uvw * D (eq. 28)."""
+        return self.topo.cap * self.topo.slot_duration
+
+
+@dataclasses.dataclass
+class Metrics:
+    energy_j: float
+    completion_s: float
+    fairness_term: float          # Q * sum_t t*delta_{f,t}
+    feasible: bool
+    max_violation: float
+    psi: np.ndarray               # (E, W, T) total per-link traffic, Gbits
+    active_devices: np.ndarray    # (V, W, T) bool
+    served: np.ndarray            # (F,) Gbits delivered
+
+    def objective(self, kind: str) -> float:
+        base = self.energy_j if kind == "energy" else self.completion_s
+        return base + self.fairness_term
+
+
+def _delta_from_x(p: ScheduleProblem, x: np.ndarray) -> np.ndarray:
+    """delta[f, t] = net injection at the source of flow f in slot t."""
+    F, E, W, T = p.shape_x
+    out_src = np.zeros((F, T))
+    in_src = np.zeros((F, T))
+    for f in range(F):
+        s = p.coflow.src[f]
+        out_src[f] = x[f, p.e_src == s].sum(axis=(0, 1))
+        in_src[f] = x[f, p.e_dst == s].sum(axis=(0, 1))
+    return out_src - in_src
+
+
+def evaluate(p: ScheduleProblem, x: np.ndarray) -> Metrics:
+    """Exact accounting of a schedule tensor with the paper's equations."""
+    F, E, W, T = p.shape_x
+    assert x.shape == (F, E, W, T), (x.shape, p.shape_x)
+    D = p.topo.slot_duration
+    psi = x.sum(axis=0)                              # (E, W, T), eq. (29)
+
+    viol = 0.0
+    # eq. (28): psi <= C*D   (W entries with zero capacity must carry nothing)
+    viol = max(viol, float((psi - p.slot_cap_gbits[:, :, None]).max(initial=0.0)))
+    # eq. (26): server egress <= rho*D
+    egress = np.zeros((p.topo.n_vertices, T))
+    np.add.at(egress, p.e_src, psi.sum(axis=1))
+    viol = max(viol, float((egress[p.is_server] - p.rho * D).max(initial=0.0)))
+    # eq. (27): switch ingress <= sigma*D
+    ingress = np.zeros((p.topo.n_vertices, T))
+    np.add.at(ingress, p.e_dst, psi.sum(axis=1))
+    sw = p.is_switch & np.isfinite(p.sigma)
+    viol = max(viol, float((ingress[sw] - p.sigma[sw, None] * D).max(initial=0.0)))
+    # flow-edge mask (eq. 46 et al.)
+    viol = max(viol, float((x * ~p.flow_edge_mask[:, :, None, None]).max(initial=0.0)))
+
+    # eq. (25): conservation at intermediate vertices.  Passive vertices
+    # (AWGR ports) conserve per wavelength (no O/E conversion); electronic
+    # vertices (switches/OLT/backplanes/relay servers) may convert, so they
+    # conserve the wavelength-summed flow.
+    passive = ~(p.is_server | p.is_switch)
+    for f in range(F):
+        net = np.zeros((p.topo.n_vertices, W, T))
+        np.add.at(net, p.e_src, x[f])
+        np.subtract.at(net, p.e_dst, x[f])
+        inter = np.ones(p.topo.n_vertices, dtype=bool)
+        inter[p.coflow.src[f]] = inter[p.coflow.dst[f]] = False
+        viol = max(viol, float(np.abs(net[inter & passive]).max(initial=0.0)))
+        viol = max(viol, float(np.abs(net.sum(axis=1)[inter]).max(initial=0.0)))
+
+    # eq. (30): demand satisfaction (report shortfall as violation)
+    delta = _delta_from_x(p, x)
+    served = delta.sum(axis=1)
+    viol = max(viol, float(np.abs(served - p.coflow.size).max(initial=0.0)))
+
+    # release times (extension): no traffic before a flow's release slot
+    if p.release_slot is not None:
+        for f in range(F):
+            r = int(p.release_slot[f])
+            if r > 0:
+                viol = max(viol, float(x[f, :, :, :r].max(initial=0.0)))
+
+    # eq. (47): one TX wavelength per server per slot (PON3)
+    if p.topo.one_wavelength_tx and p.topo.awgr_in_ports:
+        awgr_in = np.isin(p.e_dst, p.topo.awgr_in_ports)
+        for i in np.flatnonzero(p.is_server):
+            sel = (p.e_src == i) & awgr_in
+            if sel.any():
+                n_w_used = (psi[sel].sum(axis=0) > TOL).sum(axis=0)  # (T,)
+                viol = max(viol, float(n_w_used.max(initial=0) - 1))
+
+    # device activity (eqs. 31-38) and power (eqs. 19-21)
+    beta = np.zeros((p.topo.n_vertices, W, T))
+    np.add.at(beta, p.e_src, psi)
+    np.add.at(beta, p.e_dst, psi)
+    active = beta > TOL
+    p_dev = active * p.p_max[:, None, None]
+    energy = D * float(p_dev.sum())                       # eq. (22)
+    energy += D * float((p.eps[:, None, None] * beta * p.is_server[:, None, None]).sum())
+
+    # completion time M (eqs. 39-45): last active link's in-slot finish time
+    with np.errstate(divide="ignore", invalid="ignore"):
+        tx_time = np.where(psi > TOL,
+                           psi / np.maximum(p.topo.cap[:, :, None], 1e-30), 0.0)
+    t_idx = np.arange(1, T + 1)[None, None, :]
+    omega = np.where(psi > TOL, D * (t_idx - 1) + tx_time, 0.0)   # eq. (39)
+    completion = float(omega.max(initial=0.0))                    # eqs. (43-45)
+
+    fairness = p.q_weight * float((delta * t_idx[0, 0][None, :]).sum())
+    return Metrics(energy_j=energy, completion_s=completion,
+                   fairness_term=fairness, feasible=viol <= 1e-4,
+                   max_violation=viol, psi=psi,
+                   active_devices=active, served=served)

@@ -1,0 +1,76 @@
+"""MapReduce shuffle-phase co-flow traffic model (paper §IV-B).
+
+A sort workload (identity mappers, GraySort-style) shuffles the full
+intermediate dataset from the map servers to the reduce servers.  Ten map
+servers and six reduce servers are drawn from the topology's task servers;
+each (mapper, reducer) pair is one flow => 60 flows.  Flow sizes:
+
+  * uniform (Indy GraySort): every map output is total/10, split evenly
+    over the 6 reducers.
+  * skewed (Daytona GraySort): map output sizes ~ U(0, total), rescaled so
+    they sum to `total_gbits`, each split evenly over the reducers.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .topology import Topology
+
+
+@dataclasses.dataclass(frozen=True)
+class CoflowSet:
+    """A co-flow: all flows must complete before the job advances."""
+
+    src: np.ndarray        # (F,) vertex ids
+    dst: np.ndarray        # (F,) vertex ids
+    size: np.ndarray       # (F,) Gbits
+    n_vertices: int
+
+    @property
+    def n_flows(self) -> int:
+        return int(self.src.shape[0])
+
+    @property
+    def total_gbits(self) -> float:
+        return float(self.size.sum())
+
+
+def shuffle_traffic(topo: Topology, total_gbits: float, *,
+                    n_map: int = 10, n_reduce: int = 6,
+                    skew: bool = False, seed: int = 0) -> CoflowSet:
+    """Build the shuffle co-flow set for `topo` (placement is seeded-random,
+    matching the paper's random task allocation)."""
+    rng = np.random.default_rng(seed)
+    servers = np.asarray(topo.task_servers)
+    if n_map + n_reduce > len(servers):
+        raise ValueError(f"{topo.name}: need {n_map + n_reduce} task servers, "
+                         f"have {len(servers)}")
+    perm = rng.permutation(len(servers))
+    mappers = servers[perm[:n_map]]
+    reducers = servers[perm[n_map:n_map + n_reduce]]
+
+    if skew:
+        # map output sizes ~ U(0, total), rescaled to sum to total (Fig. 6)
+        raw = rng.uniform(0.0, total_gbits, size=n_map)
+        map_out = raw * (total_gbits / raw.sum())
+    else:
+        map_out = np.full(n_map, total_gbits / n_map)
+
+    src, dst, size = [], [], []
+    for mi, m in enumerate(mappers):
+        for r in reducers:
+            src.append(m)
+            dst.append(r)
+            size.append(map_out[mi] / n_reduce)
+    return CoflowSet(np.asarray(src), np.asarray(dst),
+                     np.asarray(size, dtype=np.float64), topo.n_vertices)
+
+
+def custom_coflow(src, dst, size, n_vertices: int) -> CoflowSet:
+    src = np.asarray(src, dtype=np.int64)
+    dst = np.asarray(dst, dtype=np.int64)
+    size = np.asarray(size, dtype=np.float64)
+    assert src.shape == dst.shape == size.shape
+    return CoflowSet(src, dst, size, n_vertices)

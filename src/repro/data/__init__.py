@@ -1,0 +1,3 @@
+from .pipeline import DataConfig, synthetic_stream
+
+__all__ = ["DataConfig", "synthetic_stream"]

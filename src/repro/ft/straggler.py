@@ -1,0 +1,77 @@
+"""Straggler detection + mitigation hooks.
+
+On a real multi-host pod every host runs the same SPMD program, so a
+straggler stalls the whole step at the next collective.  The monitor
+tracks per-step wall times, flags hosts/steps beyond a robust z-score,
+and drives two mitigations:
+
+  1. co-flow re-scheduling: a flagged step's SlotPlan is re-solved with
+     the slow link/axis capacity derated (the paper's scheduler simply
+     sees a smaller C_uvw — same machinery, degraded topology);
+  2. checkpoint-and-remesh: persistent stragglers trigger an elastic
+     restart on a smaller mesh via ft.checkpoint (restore with new
+     shardings).
+
+This container is single-host, so wall-time feeds come from the local
+step loop; the unit tests inject synthetic timings.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class StragglerEvent:
+    step: int
+    wall_s: float
+    median_s: float
+    severity: float            # wall / median
+
+
+class HeartbeatMonitor:
+    def __init__(self, window: int = 50, threshold: float = 2.0,
+                 persistent_after: int = 3):
+        self.window = window
+        self.threshold = threshold
+        self.persistent_after = persistent_after
+        self.times: list[float] = []
+        self.events: list[StragglerEvent] = []
+        self._consecutive = 0
+        self._t0: float | None = None
+
+    # -- step timing ----------------------------------------------------
+    def step_start(self):
+        self._t0 = time.perf_counter()
+
+    def step_end(self, step: int) -> StragglerEvent | None:
+        assert self._t0 is not None
+        return self.observe(step, time.perf_counter() - self._t0)
+
+    def observe(self, step: int, wall_s: float) -> StragglerEvent | None:
+        self.times.append(wall_s)
+        hist = self.times[-self.window:]
+        med = float(np.median(hist))
+        if len(hist) >= 5 and wall_s > self.threshold * med:
+            ev = StragglerEvent(step, wall_s, med, wall_s / med)
+            self.events.append(ev)
+            self._consecutive += 1
+            return ev
+        self._consecutive = 0
+        return None
+
+    @property
+    def persistent(self) -> bool:
+        """True when mitigation should escalate from re-scheduling to
+        checkpoint-and-remesh."""
+        return self._consecutive >= self.persistent_after
+
+    # -- mitigation 1: derate the fabric and re-plan ----------------------
+    def derated_fabric(self, spec, axis: int, factor: float = 0.5):
+        """Return a FabricSpec with the straggling axis derated; feed to
+        core.fabric.plan_collectives to re-schedule around it."""
+        bw = list(spec.axis_bw)
+        bw[axis] = bw[axis] * factor
+        return dataclasses.replace(spec, axis_bw=tuple(bw))

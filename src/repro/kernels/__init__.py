@@ -1,0 +1,10 @@
+"""Pallas TPU kernels (validated on CPU via interpret=True):
+
+  flash_attention - online-softmax attention; GQA, causal/SWA, softcap
+  rglru_scan      - RG-LRU linear recurrence (VMEM-resident sequential dim)
+  ops             - jit'd public wrappers (layout, padding, block sizes)
+  ref             - pure-jnp oracles for allclose validation
+"""
+from . import flash_attention, ops, ref, rglru_scan
+
+__all__ = ["flash_attention", "ops", "ref", "rglru_scan"]

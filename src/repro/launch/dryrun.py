@@ -1,0 +1,301 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Everything below may import jax (the two lines above MUST run first —
+# jax locks the device count on first init).
+import argparse
+import dataclasses
+import json
+import pathlib
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer
+from repro.models.common import ModelConfig
+from repro.runtime import steps as rsteps
+from repro.runtime.sharding import Strategy, install_sharder
+from repro.train import optimizer as ropt
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+SHAPES = {
+    "train_4k": dict(seq=4096, batch=256, mode="train"),
+    "prefill_32k": dict(seq=32768, batch=32, mode="prefill"),
+    "decode_32k": dict(seq=32768, batch=128, mode="decode"),
+    "long_500k": dict(seq=524288, batch=1, mode="decode"),
+}
+
+COLLECTIVE_RE = re.compile(
+    r"(\w[\w\.\-]*)\s*=\s*([a-z0-9]+)\[([\d,]*)\][^=]*?"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)")
+
+DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+               "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8, "f8e4m3fn": 1,
+               "f8e5m2": 1, "s16": 2, "u16": 2}
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum per-device result bytes of every collective op by kind."""
+    out: dict[str, float] = {}
+    count: dict[str, int] = {}
+    for m in COLLECTIVE_RE.finditer(hlo_text):
+        dtype, dims, kind = m.group(2), m.group(3), m.group(4)
+        if m.group(1).startswith(("%", "fusion")):
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        nbytes = n * DTYPE_BYTES.get(dtype, 4)
+        out[kind] = out.get(kind, 0.0) + nbytes
+        count[kind] = count.get(kind, 0) + 1
+    out["_counts"] = count
+    return out
+
+
+def count_params(shapes_tree, cfg: ModelConfig) -> tuple[float, float]:
+    """(total, active) parameter counts; active discounts MoE experts to
+    the routed share (top_k/E) plus shared experts."""
+    total = active = 0.0
+    moe = cfg.moe
+
+    def visit(path, leaf):
+        nonlocal total, active
+        n = float(np.prod(leaf.shape))
+        keys = [getattr(k, "key", None) for k in path]
+        stacked = "groups" in keys or "enc_groups" in keys
+        total += n
+        if moe and "ffn" in keys:
+            name = keys[-1]
+            if name in ("w_gate", "w_up", "w_down"):
+                ep = leaf.shape[1] if stacked else leaf.shape[0]
+                active += n * moe.top_k / max(ep, 1)
+                return
+        active += n
+
+    jax.tree_util.tree_map_with_path(visit, shapes_tree)
+    return total, active
+
+
+def input_specs(arch: str, shape: str, *, multi_pod: bool = False):
+    """ShapeDtypeStruct stand-ins for every input of (arch, shape):
+    weak-type-correct, shardable, no device allocation."""
+    cfg = configs.get(arch)
+    sp = SHAPES[shape]
+    mode = sp["mode"]
+    if mode in ("train", "prefill"):
+        return rsteps.synthetic_batch_shapes(cfg, sp["batch"], sp["seq"],
+                                             mode=mode)
+    # decode: cache + one token
+    sd = jax.ShapeDtypeStruct
+    batch = {"tokens": sd((sp["batch"], 1), jnp.int32),
+             "position": sd((), jnp.int32)}
+    if cfg.family == "encdec":
+        batch["memory"] = sd((sp["batch"], 4096, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+@dataclasses.dataclass
+class CellResult:
+    arch: str
+    shape: str
+    mesh: str
+    ok: bool
+    seconds: float
+    error: str = ""
+    flops_per_device: float = 0.0
+    bytes_per_device: float = 0.0
+    collectives: dict | None = None
+    memory: dict | None = None
+    params_total: float = 0.0
+    params_active: float = 0.0
+    tokens: int = 0
+
+
+def pick_strategy_kind(cfg, mode: str) -> str:
+    """Measured-best sharding per (arch family x step kind) — the §Perf
+    outcome: dense train wins with ZeRO-3/fsdp (6x less comm than 2-D
+    TP at these sizes); MoE train and all serving keep 2-D TP."""
+    if mode == "train" and cfg.moe is None and cfg.sharding == "2d":
+        return "fsdp"
+    return cfg.sharding
+
+
+def auto_microbatches(mode: str, multi_pod: bool, unroll: bool) -> int:
+    """Gradient-accumulation factor so train activations fit v5e HBM.
+    The unrolled measurement pass keeps mb=1 (cost_analysis would count
+    the microbatch loop body once, corrupting per-step totals)."""
+    if mode != "train" or unroll:
+        return 1
+    return 32 if multi_pod else 8
+
+
+def run_cell(arch: str, shape: str, *, multi_pod: bool, sp: bool = False,
+             impl: str = "xla", unroll: bool = False,
+             zero3_gather: bool = True,
+             strategy_kind: str = "auto",
+             microbatches: int = 0) -> CellResult:
+    cfg = configs.get(arch)
+    spc = SHAPES[shape]
+    mode = spc["mode"]
+    t0 = time.time()
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+
+    if shape == "long_500k" and not cfg.subquadratic:
+        return CellResult(arch, shape, mesh_name, ok=False, seconds=0.0,
+                          error="skip: full-attention arch at 512k context "
+                                "(see DESIGN.md §5)")
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    skind = (pick_strategy_kind(cfg, mode) if strategy_kind == "auto"
+             else strategy_kind)
+    strategy = Strategy(mesh, skind, multi_pod, sp=sp and mode == "train")
+    install_sharder(strategy)
+    tp = strategy.tp
+    try:
+        params_sh = transformer.init_params(cfg, shapes_only=True, tp=tp,
+                                            dtype=jnp.bfloat16)
+        p_specs = strategy.shardings_for(params_sh)
+        n_total, n_active = count_params(params_sh, cfg)
+
+        if mode == "train":
+            ocfg = ropt.AdamWConfig()
+            opt_sh = jax.eval_shape(ropt.adamw_init, params_sh)
+            o_specs = strategy.shardings_for(opt_sh)
+            batch_sh = rsteps.synthetic_batch_shapes(cfg, spc["batch"],
+                                                     spc["seq"], mode="train")
+            b_specs = jax.tree.map(
+                lambda s: NamedSharding(mesh, s),
+                strategy.batch_spec(batch_sh))
+            mb = microbatches or auto_microbatches(mode, multi_pod, unroll)
+            fn = rsteps.make_train_step(cfg, ocfg, impl=impl, remat=True,
+                                        unroll=unroll,
+                                        strategy=strategy if zero3_gather
+                                        else None, microbatches=mb)
+            jitted = jax.jit(fn, in_shardings=(p_specs, o_specs, b_specs),
+                             out_shardings=(p_specs, o_specs, None))
+            args = (params_sh, opt_sh, batch_sh)
+            tokens = spc["batch"] * spc["seq"]
+        elif mode == "prefill":
+            batch_sh = rsteps.synthetic_batch_shapes(cfg, spc["batch"],
+                                                     spc["seq"], mode="prefill")
+            b_specs = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                                   strategy.batch_spec(batch_sh))
+            fn = rsteps.make_prefill_step(cfg, impl=impl,
+                                          max_len=spc["seq"] + 128,
+                                          unroll=unroll,
+                                          strategy=strategy if zero3_gather
+                                          else None)
+            jitted = jax.jit(fn, in_shardings=(p_specs, b_specs))
+            args = (params_sh, batch_sh)
+            tokens = spc["batch"] * spc["seq"]
+        else:  # decode
+            cache_sh = transformer.init_cache(cfg, spc["batch"], spc["seq"],
+                                              tp=tp, shapes_only=True)
+            c_specs = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                                   strategy.cache_spec(cache_sh))
+            tok_sh = jax.ShapeDtypeStruct((spc["batch"], 1), jnp.int32)
+            tok_spec = NamedSharding(
+                mesh, strategy.batch_spec({"t": tok_sh})["t"])
+            pos_sh = jax.ShapeDtypeStruct((), jnp.int32)
+            pos_spec = NamedSharding(mesh, P())
+            fn = rsteps.make_decode_step(cfg, impl=impl, unroll=unroll,
+                                         strategy=strategy if zero3_gather
+                                         else None)
+            if cfg.family == "encdec":
+                mem_sh = jax.ShapeDtypeStruct(
+                    (spc["batch"], 4096, cfg.d_model), jnp.bfloat16)
+                mem_spec = NamedSharding(
+                    mesh, strategy.batch_spec({"m": mem_sh})["m"])
+                jitted = jax.jit(fn, in_shardings=(
+                    p_specs, c_specs, tok_spec, pos_spec, mem_spec))
+                args = (params_sh, cache_sh, tok_sh, pos_sh, mem_sh)
+            else:
+                jitted = jax.jit(fn, in_shardings=(
+                    p_specs, c_specs, tok_spec, pos_spec))
+                args = (params_sh, cache_sh, tok_sh, pos_sh)
+            tokens = spc["batch"]
+
+        lowered = jitted.lower(*args)
+        compiled = lowered.compile()
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+        mem = {}
+        try:
+            ma = compiled.memory_analysis()
+            for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                         "temp_size_in_bytes", "generated_code_size_in_bytes",
+                         "alias_size_in_bytes"):
+                if hasattr(ma, attr):
+                    mem[attr] = int(getattr(ma, attr))
+        except Exception as e:                       # backend-dependent
+            mem["error"] = str(e)
+        coll = parse_collectives(compiled.as_text())
+        return CellResult(
+            arch, shape, mesh_name, ok=True, seconds=time.time() - t0,
+            flops_per_device=float(cost.get("flops", 0.0)),
+            bytes_per_device=float(cost.get("bytes accessed", 0.0)),
+            collectives=coll, memory=mem, params_total=n_total,
+            params_active=n_active, tokens=tokens)
+    except Exception as e:
+        return CellResult(arch, shape, mesh_name, ok=False,
+                          seconds=time.time() - t0,
+                          error=f"{type(e).__name__}: {e}\n"
+                                f"{traceback.format_exc()[-2000:]}")
+    finally:
+        install_sharder(None)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--sp", action="store_true")
+    ap.add_argument("--strategy", default="auto",
+                    choices=["auto", "2d", "fsdp"])
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--unroll", action="store_true",
+                    help="unroll layer groups so cost_analysis counts "
+                         "every layer (roofline measurement mode)")
+    args = ap.parse_args()
+
+    archs = configs.all_archs() if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    RESULTS.mkdir(parents=True, exist_ok=True)
+
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}_{shape}_{'2x16x16' if mp else '16x16'}"
+                if args.unroll:
+                    tag += "_unrolled"
+                out = RESULTS / f"{tag}.json"
+                if out.exists() and not args.force:
+                    prev = json.loads(out.read_text())
+                    print(f"[cached] {tag}: ok={prev['ok']}")
+                    continue
+                res = run_cell(arch, shape, multi_pod=mp, sp=args.sp,
+                               unroll=args.unroll,
+                               strategy_kind=args.strategy)
+                out.write_text(json.dumps(dataclasses.asdict(res), indent=1))
+                status = "OK" if res.ok else ("SKIP" if res.error.startswith("skip")
+                                              else "FAIL")
+                print(f"[{status}] {tag}: {res.seconds:.1f}s "
+                      f"flops/dev={res.flops_per_device:.3g} "
+                      f"{res.error.splitlines()[0] if res.error else ''}")
+
+
+if __name__ == "__main__":
+    main()

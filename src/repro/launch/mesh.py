@@ -1,0 +1,35 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module never
+touches jax device state (jax locks the device count on first use, and
+only launch/dryrun.py sets the 512-placeholder-device XLA flag)."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips/pod; multi_pod stacks 2 pods (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) == n:
+        return jax.make_mesh(shape, axes)
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devices)}; "
+            "run under launch/dryrun.py (sets "
+            "--xla_force_host_platform_device_count=512)")
+    dev = np.asarray(devices[:n]).reshape(shape)
+    return jax.sharding.Mesh(dev, axes)
+
+
+def make_host_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh over whatever local devices exist (tests/examples)."""
+    n = int(np.prod(shape))
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(f"need {n} local devices, have {len(devices)}")
+    return jax.sharding.Mesh(np.asarray(devices).reshape(shape), axes)

@@ -1,0 +1,86 @@
+"""Batched serving driver: prefill a batch of prompts, then decode.
+
+Demonstrates the full serving path (prefill -> KV caches -> decode loop)
+with greedy sampling on any architecture, on local devices.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.serve --arch gemma2-27b --smoke \
+      --batch 4 --prompt-len 64 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.models import transformer
+from repro.runtime import steps as rsteps
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="phi4-mini-3.8b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = configs.get(args.arch, smoke=args.smoke)
+    key = jax.random.PRNGKey(args.seed)
+    params = transformer.init_params(cfg, key, tp=1)
+
+    B, P = args.batch, args.prompt_len
+    toks = jax.random.randint(key, (B, P), 0, cfg.vocab_size)
+    batch = {"tokens": toks}
+    memory = None
+    if cfg.family == "encdec":
+        batch["enc_embeds"] = jax.random.normal(key, (B, 32, cfg.d_model))
+        memory = transformer._encode(cfg, params, batch["enc_embeds"])
+    if cfg.family == "vlm":
+        batch["img_embeds"] = jax.random.normal(
+            key, (B, cfg.n_img_tokens, cfg.d_model))
+
+    max_len = P + args.gen + (cfg.n_img_tokens if cfg.family == "vlm" else 0)
+    prefill = jax.jit(rsteps.make_prefill_step(cfg, max_len=max_len))
+    decode = jax.jit(rsteps.make_decode_step(cfg))
+
+    t0 = time.perf_counter()
+    logits, caches = prefill(params, batch)
+    logits.block_until_ready()
+    t_prefill = time.perf_counter() - t0
+
+    out_tokens = [jnp.argmax(logits[:, -1], axis=-1)]
+    pos0 = P + (cfg.n_img_tokens if cfg.family == "vlm" else 0)
+    t0 = time.perf_counter()
+    for i in range(args.gen - 1):
+        tok = out_tokens[-1][:, None]
+        if memory is not None:
+            logits, caches = decode(params, caches, tok,
+                                    jnp.asarray(pos0 + i), memory)
+        else:
+            logits, caches = decode(params, caches, tok,
+                                    jnp.asarray(pos0 + i))
+        out_tokens.append(jnp.argmax(logits[:, -1], axis=-1))
+    jax.block_until_ready(out_tokens[-1])
+    t_decode = time.perf_counter() - t0
+
+    gen = np.stack([np.asarray(t) for t in out_tokens], axis=1)
+    print(f"arch={cfg.name} batch={B} prompt={P} gen={args.gen}")
+    print(f"prefill: {t_prefill*1e3:.1f} ms "
+          f"({B*P/t_prefill:.0f} tok/s)")
+    print(f"decode:  {t_decode*1e3:.1f} ms total, "
+          f"{B*(args.gen-1)/max(t_decode,1e-9):.0f} tok/s")
+    print("sample generations (token ids):")
+    for b in range(min(B, 2)):
+        print(f"  [{b}] {gen[b][:16].tolist()}")
+    return gen
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Model zoo: the 10 assigned architectures, config-driven.
+
+  common       - config schema, param factory, norms, RoPE, embeddings
+  attention    - GQA attention: causal / sliding-window / local+global,
+                 logit softcap, KV caches (full / windowed), head padding
+  mlp          - SwiGLU / squared-ReLU / GELU blocks
+  moe          - token-choice top-k MoE with shared experts (GShard-style
+                 capacity dispatch; experts shard on the model axis)
+  rglru        - Griffin-style RG-LRU recurrent block (RecurrentGemma)
+  xlstm        - mLSTM (chunkwise-parallel) + sLSTM (scan) blocks
+  transformer  - assembles decoder-only LMs, enc-dec, and VLM backbones
+"""
+from . import attention, common, mlp, moe, rglru, transformer, xlstm
+from .common import ModelConfig, MoEConfig
+from .transformer import (decode_step, init_params, prefill, train_logits)
+
+__all__ = [
+    "ModelConfig", "MoEConfig", "attention", "common", "decode_step",
+    "init_params", "mlp", "moe", "prefill", "rglru", "train_logits",
+    "transformer", "xlstm",
+]

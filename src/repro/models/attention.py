@@ -1,0 +1,192 @@
+"""GQA attention: causal / sliding-window, softcap, KV caches.
+
+Head counts are padded to the TP width with zero-weight head slots (see
+ModelConfig.padded_heads); real KV head k occupies a contiguous replica
+block so the padded grouping q' // (Hq/Hkv) lands on the right head.
+
+Three modes:
+  train    full-sequence causal, no cache
+  prefill  full-sequence causal, returns a cache
+  decode   one new token against the cache (full or windowed ring buffer)
+
+impl = "xla" uses einsum attention (the dry-run/roofline path); "pallas"
+calls kernels.ops.flash_attention (TPU target; interpret=True on CPU).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import (EMBED, HEADS, HEAD_DIM, KV_HEADS, ModelConfig, rope,
+                     shard, softcap)
+
+Array = jax.Array
+NEG_INF = -2.3819763e38
+
+
+def init(pf, cfg: ModelConfig, tp: int, prefix: str, d_model: int | None = None):
+    """Per-layer attention params (call under layer stacking)."""
+    d = d_model or cfg.d_model
+    hq, hkv = cfg.padded_heads(tp)
+    hd = cfg.hd
+    return {
+        "wq": pf.tensor(f"{prefix}.wq", (d, hq, hd), (EMBED, HEADS, HEAD_DIM)),
+        "wk": pf.tensor(f"{prefix}.wk", (d, hkv, hd), (EMBED, KV_HEADS, HEAD_DIM)),
+        "wv": pf.tensor(f"{prefix}.wv", (d, hkv, hd), (EMBED, KV_HEADS, HEAD_DIM)),
+        "wo": pf.tensor(f"{prefix}.wo", (hq, hd, d), (HEADS, HEAD_DIM, EMBED)),
+    }
+
+
+def make_cache(cfg: ModelConfig, batch: int, max_len: int, tp: int,
+               kind: str, dtype=jnp.bfloat16, shapes_only: bool = False):
+    """KV cache for one attention layer.  kind: "full" | "window"."""
+    _, hkv = cfg.padded_heads(tp)
+    slots = min(max_len, cfg.window) if kind == "window" else max_len
+    shape = (batch, slots, hkv, cfg.hd)
+    mk = (lambda s, d: jax.ShapeDtypeStruct(s, d)) if shapes_only else \
+         (lambda s, d: jnp.zeros(s, d))
+    return {"k": mk(shape, dtype), "v": mk(shape, dtype),
+            "len": mk((), jnp.int32)}
+
+
+def _qkv(params, x, positions, cfg: ModelConfig):
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(x.dtype))
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    q = shard(q, "batch", None, "heads", None)
+    k = shard(k, "batch", None, "kv_heads", None)
+    v = shard(v, "batch", None, "kv_heads", None)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, cfg: ModelConfig):
+    """Grouped attention.  q: (B,S,Hq,hd); k,v: (B,T,Hkv,hd);
+    mask: (B,1,S,T) or broadcastable, True = attend."""
+    B, S, Hq, hd = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, S, Hkv, G, hd)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k) / np.sqrt(hd)
+    scores = softcap(scores.astype(jnp.float32), cfg.attn_softcap)
+    scores = jnp.where(mask[:, :, None] if mask.ndim == 4 else mask,
+                       scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(B, S, Hq, hd)
+
+
+def _flash(q, k, v, cfg: ModelConfig, *, causal: bool, window: int | None):
+    from repro.kernels import ops as kops
+    return kops.flash_attention(q, k, v, causal=causal, window=window,
+                                softcap=cfg.attn_softcap)
+
+
+def _sdpa_chunked(q, k, v, cfg: ModelConfig, *, local: bool):
+    """Query-chunked causal attention: scores never exceed
+    (B, Hkv, G, cq, T) — the XLA-path answer to 32k+ sequences (the
+    Pallas flash kernel is the TPU fast path)."""
+    B, S, Hq, hd = q.shape
+    T = k.shape[1]
+    cq = max(128, min(S, (1 << 22) // max(T, 1)))
+    while S % cq:
+        cq //= 2
+    cq = max(cq, 1)
+    nq = S // cq
+    qs = q.reshape(B, nq, cq, Hq, hd).transpose(1, 0, 2, 3, 4)
+
+    def one_chunk(ci, qc):
+        qpos = ci * cq + jnp.arange(cq)
+        tpos = jnp.arange(T)
+        mask = qpos[:, None] >= tpos[None, :]
+        if local:
+            mask &= qpos[:, None] - tpos[None, :] < cfg.window
+        return _sdpa(qc, k, v, mask[None, None], cfg)
+
+    out = jax.lax.map(lambda args: one_chunk(*args),
+                      (jnp.arange(nq), qs))
+    return out.transpose(1, 0, 2, 3, 4).reshape(B, S, Hq, hd)
+
+
+def run(params, x, positions, cfg: ModelConfig, *, kind: str,
+        mode: str, cache=None, impl: str = "xla", max_len: int = 0):
+    """Attention layer body.  kind: "attn" | "attn_local".  Returns
+    (out (B,S,D), new_cache_or_None)."""
+    B, S, _ = x.shape
+    q, k, v = _qkv(params, x, positions, cfg)
+    local = kind == "attn_local"
+    new_cache = None
+
+    if mode in ("train", "prefill"):
+        if impl == "pallas" and S > 1:
+            out = _flash(q, k, v, cfg, causal=True,
+                         window=cfg.window if local else None)
+        elif S > 2048:
+            out = _sdpa_chunked(q, k, v, cfg, local=local)
+        else:
+            t = jnp.arange(S)
+            mask = t[:, None] >= t[None, :]                 # causal (S,T)
+            if local:
+                mask &= t[:, None] - t[None, :] < cfg.window
+            out = _sdpa(q, k, v, mask[None, None], cfg)
+        if mode == "prefill":
+            new_cache = _fill_cache(cfg, k, v, local, max_len or S)
+    elif mode == "decode":
+        assert S == 1 and cache is not None
+        new_cache, keys, vals, valid = _append_cache(cfg, cache, k, v, local,
+                                                     positions)
+        out = _sdpa(q, keys, vals, valid[:, None, None, :], cfg)
+    else:
+        raise ValueError(mode)
+
+    out = jnp.einsum("bshd,hdo->bso", out, params["wo"].astype(x.dtype))
+    return shard(out, "batch", "seq", "embed"), new_cache
+
+
+def _fill_cache(cfg, k, v, local, max_len: int):
+    """Build a cache from prefill keys/values sized for decoding up to
+    max_len total positions (window slots for local layers)."""
+    B, S = k.shape[:2]
+    if local:
+        slots = min(max_len, cfg.window)
+        if S > slots:
+            # keep the last `slots` keys, placed at their ring positions
+            k, v = k[:, -slots:], v[:, -slots:]
+            # ring index of absolute position p is p % slots; rotate so the
+            # kept keys sit at their ring slots for continued decoding
+            shift = S % slots
+            k = jnp.roll(k, shift, axis=1)
+            v = jnp.roll(v, shift, axis=1)
+            pad_k, pad_v = k, v
+        else:
+            pad = slots - S
+            pad_k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            pad_v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    else:
+        pad = max(max_len - S, 0)
+        pad_k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        pad_v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    return {"k": pad_k.astype(jnp.bfloat16), "v": pad_v.astype(jnp.bfloat16),
+            "len": jnp.asarray(S, jnp.int32)}
+
+
+def _append_cache(cfg, cache, k, v, local, positions):
+    """Write one token into the cache; return (cache', keys, vals, valid)."""
+    B, _, hkv, hd = k.shape
+    slots = cache["k"].shape[1]
+    length = cache["len"]
+    idx = (length % slots) if local else jnp.minimum(length, slots - 1)
+    ck = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k.astype(cache["k"].dtype), idx, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v.astype(cache["v"].dtype), idx, axis=1)
+    new_len = length + 1
+    slot_ids = jnp.arange(slots)
+    valid = (slot_ids < new_len)[None, :].astype(bool)
+    valid = jnp.broadcast_to(valid, (B, slots))
+    return ({"k": ck, "v": cv, "len": new_len},
+            ck.astype(k.dtype), cv.astype(v.dtype), valid)

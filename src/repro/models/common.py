@@ -1,0 +1,179 @@
+"""Config schema, parameter factory, and shared layer primitives."""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+PyTree = Any
+
+# logical activation/parameter axis names; runtime.sharding maps these to
+# mesh axes ("data", "model", "pod") per strategy.
+BATCH, SEQ, EMBED, HEADS, KV_HEADS, HEAD_DIM = (
+    "batch", "seq", "embed", "heads", "kv_heads", "head_dim")
+MLP, VOCAB, EXPERTS, LAYERS, GROUPS, CONV = (
+    "mlp", "vocab", "experts", "layers", "groups", "conv")
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_expert: int
+    n_shared: int = 0            # qwen2-moe: one shared expert (gated)
+    d_shared: int = 0
+    capacity_factor: float = 1.25
+    group_size: int = 1024       # tokens per dispatch group
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0            # 0 -> d_model // n_heads
+    # block pattern, repeated to cover n_layers.  kinds:
+    #   "attn"       full causal attention + MLP
+    #   "attn_local" sliding-window attention + MLP
+    #   "rglru"      Griffin recurrent block + MLP
+    #   "mlstm"      xLSTM matrix-memory block (no separate MLP)
+    #   "slstm"      xLSTM scalar-memory block (no separate MLP)
+    block_pattern: tuple[str, ...] = ("attn",)
+    mlp_kind: str = "swiglu"     # swiglu | relu2 | geglu | none
+    moe: MoEConfig | None = None
+    window: int = 4096           # sliding-window size for attn_local
+    attn_softcap: float = 0.0    # gemma2: 50.0
+    final_softcap: float = 0.0   # gemma2: 30.0
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = True
+    family: str = "lm"           # lm | encdec | vlm
+    n_enc_layers: int = 0        # encdec: encoder depth
+    n_img_tokens: int = 0        # vlm: stub patch-embedding tokens
+    rms_eps: float = 1e-6
+    # sharding strategy hint consumed by runtime.sharding
+    sharding: str = "2d"         # "2d" (FSDP x TP + SP) | "fsdp" (ZeRO-3)
+    # sub-quadratic? (drives long_500k eligibility; see DESIGN.md)
+    subquadratic: bool = False
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    def pattern_for(self, n_layers: int) -> tuple[str, ...]:
+        reps = math.ceil(n_layers / len(self.block_pattern))
+        return (self.block_pattern * reps)[:n_layers]
+
+    def padded_heads(self, tp: int) -> tuple[int, int]:
+        """(n_q_heads, n_kv_heads) padded for a tp-way model axis.
+
+        Zero-weight padding heads keep semantics; see DESIGN.md §5."""
+        if self.sharding == "fsdp" or tp == 1:
+            return self.n_heads, self.n_kv_heads
+        hq = math.ceil(self.n_heads / tp) * tp
+        hkv = self.n_kv_heads if self.n_kv_heads % tp == 0 \
+            else math.ceil(self.n_kv_heads / tp) * tp
+        assert hq % hkv == 0 or hkv % hq == 0
+        return hq, min(hkv, hq)
+
+    def padded_vocab(self, tp: int) -> int:
+        mult = 128 * max(tp, 1)
+        return math.ceil(self.vocab_size / mult) * mult
+
+
+# ---------------------------------------------------------------------------
+# Parameter factory: builds {name: array} plus a parallel logical-axes tree
+# ---------------------------------------------------------------------------
+
+class ParamFactory:
+    """Collects parameters and their logical axes; supports real init and
+    shape-only (ShapeDtypeStruct) modes so the dry-run never allocates."""
+
+    def __init__(self, key: Array | None, dtype=jnp.float32,
+                 shapes_only: bool = False):
+        self.key = key
+        self.dtype = dtype
+        self.shapes_only = shapes_only
+        self.axes: dict[str, tuple] = {}
+
+    def _split(self):
+        self.key, sub = jax.random.split(self.key)
+        return sub
+
+    def tensor(self, name: str, shape: tuple[int, ...], axes: tuple,
+               scale: float | None = None, zero: bool = False):
+        assert len(shape) == len(axes), (name, shape, axes)
+        self.axes[name] = axes
+        if self.shapes_only:
+            return jax.ShapeDtypeStruct(shape, self.dtype)
+        if zero:
+            return jnp.zeros(shape, self.dtype)
+        if scale is None:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            scale = 1.0 / math.sqrt(max(fan_in, 1))
+        return (jax.random.normal(self._split(), shape, self.dtype) * scale)
+
+
+# activation-sharding hook: runtime.sharding installs the real constraint
+# function; models stay import-independent of the mesh machinery.
+_SHARDER: Callable[[Array, tuple], Array] | None = None
+
+
+def set_sharder(fn: Callable[[Array, tuple], Array] | None) -> None:
+    global _SHARDER
+    _SHARDER = fn
+
+
+def shard(x: Array, *axes: str | None) -> Array:
+    """Annotate activation x with logical axes (no-op without a mesh)."""
+    if _SHARDER is None:
+        return x
+    return _SHARDER(x, axes)
+
+
+def rms_norm(x: Array, w: Array, eps: float = 1e-6) -> Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(jnp.square(x), axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+def softcap(x: Array, cap: float) -> Array:
+    if not cap:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def rope(x: Array, positions: Array, theta: float) -> Array:
+    """Rotary embedding.  x: (..., S, H, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    freqs = theta ** (-jnp.arange(0, hd // 2, dtype=jnp.float32) / (hd // 2))
+    angles = positions[..., None].astype(jnp.float32) * freqs     # (..., S, hd/2)
+    angles = angles[..., None, :]                                 # (..., S, 1, hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def cross_entropy(logits: Array, labels: Array, *,
+                  n_real_vocab: int, final_cap: float = 0.0) -> Array:
+    """Mean CE over tokens; padded vocab entries are masked out.
+    labels == -1 positions are ignored (e.g. VLM image tokens)."""
+    logits = softcap(logits.astype(jnp.float32), final_cap)
+    pad = jnp.arange(logits.shape[-1]) >= n_real_vocab
+    logits = jnp.where(pad, -1e30, logits)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    valid = labels >= 0
+    safe = jnp.maximum(labels, 0)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = jnp.where(valid, lse - gold, 0.0)
+    return nll.sum() / jnp.maximum(valid.sum(), 1)

@@ -1,0 +1,43 @@
+"""Feed-forward blocks: SwiGLU (llama-family), squared-ReLU (nemotron),
+GeGLU (gemma family)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import EMBED, MLP, ModelConfig, shard
+
+Array = jax.Array
+
+
+def init(pf, cfg: ModelConfig, prefix: str, d_model: int | None = None,
+         d_ff: int | None = None):
+    d = d_model or cfg.d_model
+    f = d_ff or cfg.d_ff
+    gated = cfg.mlp_kind in ("swiglu", "geglu")
+    p = {"w_up": pf.tensor(f"{prefix}.w_up", (d, f), (EMBED, MLP)),
+         "w_down": pf.tensor(f"{prefix}.w_down", (f, d), (MLP, EMBED))}
+    if gated:
+        p["w_gate"] = pf.tensor(f"{prefix}.w_gate", (d, f), (EMBED, MLP))
+    return p
+
+
+def run(params, x: Array, cfg: ModelConfig, kind: str | None = None) -> Array:
+    kind = kind or cfg.mlp_kind
+    dt = x.dtype
+    up = jnp.einsum("bsd,df->bsf", x, params["w_up"].astype(dt))
+    up = shard(up, "batch", None, "mlp")
+    if kind == "swiglu":
+        gate = jnp.einsum("bsd,df->bsf", x, params["w_gate"].astype(dt))
+        h = jax.nn.silu(gate) * up
+    elif kind == "geglu":
+        gate = jnp.einsum("bsd,df->bsf", x, params["w_gate"].astype(dt))
+        h = jax.nn.gelu(gate, approximate=True) * up
+    elif kind == "relu2":
+        h = jnp.square(jax.nn.relu(up))
+    elif kind == "gelu":
+        h = jax.nn.gelu(up, approximate=True)
+    else:
+        raise ValueError(kind)
+    out = jnp.einsum("bsf,fd->bsd", h, params["w_down"].astype(dt))
+    return shard(out, "batch", "seq", "embed")

@@ -1,0 +1,120 @@
+"""Token-choice top-k MoE with optional shared expert (GShard-style).
+
+Dispatch: tokens are grouped (group_size tokens per group); within each
+group every expert accepts up to C = group_size * top_k * cf / E tokens.
+The dispatch/combine einsums reshard tokens onto the expert-sharded
+("model" axis) weight stacks — XLA SPMD lowers this to the all-to-all
+pattern the paper's fabric scheduler treats as a co-flow.
+
+Configs served:
+  granite-moe-1b : 32 experts, top-8, d_expert 512, no shared expert
+  qwen2-moe-a2.7b: 60 routed (padded to 64 for 16-way EP), top-4,
+                   d_expert 1408, one shared expert (5632) with sigmoid gate
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .common import EMBED, EXPERTS, MLP, ModelConfig, MoEConfig, shard
+
+Array = jax.Array
+
+
+def padded_experts(moe: MoEConfig, tp: int) -> int:
+    if tp <= 1:
+        return moe.n_experts
+    return math.ceil(moe.n_experts / tp) * tp
+
+
+def init(pf, cfg: ModelConfig, tp: int, prefix: str):
+    moe = cfg.moe
+    d, f = cfg.d_model, moe.d_expert
+    ep = padded_experts(moe, tp)
+    p = {
+        "router": pf.tensor(f"{prefix}.router", (d, ep), (EMBED, EXPERTS)),
+        "w_gate": pf.tensor(f"{prefix}.w_gate", (ep, d, f),
+                            (EXPERTS, EMBED, MLP)),
+        "w_up": pf.tensor(f"{prefix}.w_up", (ep, d, f), (EXPERTS, EMBED, MLP)),
+        "w_down": pf.tensor(f"{prefix}.w_down", (ep, f, d),
+                            (EXPERTS, MLP, EMBED)),
+    }
+    if moe.n_shared:
+        fs = moe.d_shared
+        p["shared_gate"] = pf.tensor(f"{prefix}.shared_gate", (d, fs),
+                                     (EMBED, MLP))
+        p["shared_up"] = pf.tensor(f"{prefix}.shared_up", (d, fs), (EMBED, MLP))
+        p["shared_down"] = pf.tensor(f"{prefix}.shared_down", (fs, d),
+                                     (MLP, EMBED))
+        p["shared_mix"] = pf.tensor(f"{prefix}.shared_mix", (d, 1),
+                                    (EMBED, None))
+    return p
+
+
+def run(params, x: Array, cfg: ModelConfig, tp: int = 1):
+    """x: (B, S, D) -> (out, aux) where aux carries the load-balance loss."""
+    moe = cfg.moe
+    B, S, D = x.shape
+    ep = params["router"].shape[-1]
+    n_real = moe.n_experts
+    dt = x.dtype
+
+    g = min(moe.group_size, B * S)
+    n_tok = B * S
+    n_groups = max(n_tok // g, 1)
+    g = n_tok // n_groups
+    xt = x.reshape(n_groups, g, D)
+
+    logits = jnp.einsum("ngd,de->nge", xt, params["router"].astype(dt))
+    logits = jnp.where(jnp.arange(ep) < n_real, logits.astype(jnp.float32),
+                       -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)                       # (n,g,E)
+    topv, topi = jax.lax.top_k(probs, moe.top_k)                  # (n,g,K)
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)  # renorm
+
+    # load-balance auxiliary (Switch-style): E * sum_e fraction_e * prob_e
+    me = probs.mean(axis=(0, 1))
+    ce = jnp.zeros(ep).at[topi.reshape(-1)].add(1.0) / (n_groups * g * moe.top_k)
+    aux = n_real * jnp.sum(me * ce)
+
+    cap = int(math.ceil(g * moe.top_k * moe.capacity_factor / n_real))
+    cap = max(cap, moe.top_k)
+    # position of each (token, k) within its expert queue
+    onehot = jax.nn.one_hot(topi, ep, dtype=jnp.int32)            # (n,g,K,E)
+    flat = onehot.reshape(n_groups, g * moe.top_k, ep)
+    pos = jnp.cumsum(flat, axis=1) * flat - 1                     # (n,gK,E)
+    pos = pos.reshape(n_groups, g, moe.top_k, ep)
+    keep = (pos >= 0) & (pos < cap)
+    # dispatch tensor (n, g, E, C); groups ride the data axis, experts the
+    # model axis, so dispatch + expert FFN einsums are comm-free (weights
+    # arrive via the ZeRO-3 gather) — see EXPERIMENTS.md §Perf.
+    pos_oh = jax.nn.one_hot(jnp.where(keep, pos, cap), cap + 1,
+                            dtype=dt)[..., :cap]
+    disp = jnp.einsum("ngke,ngkec->ngec", onehot.astype(dt), pos_oh)
+    comb = jnp.einsum("ngk,ngke,ngkec->ngec", topv.astype(dt),
+                      onehot.astype(dt), pos_oh)
+    disp = shard(disp, "batch", None, "experts", None)
+    comb = shard(comb, "batch", None, "experts", None)
+
+    xin = jnp.einsum("ngec,ngd->necd", disp, xt)                  # (n,E,C,D)
+    xin = shard(xin, "batch", "experts", None, None)
+    gate = jnp.einsum("necd,edf->necf", xin, params["w_gate"].astype(dt))
+    up = jnp.einsum("necd,edf->necf", xin, params["w_up"].astype(dt))
+    h = jax.nn.silu(gate) * up
+    h = shard(h, "batch", "experts", None, None)
+    eout = jnp.einsum("necf,efd->necd", h, params["w_down"].astype(dt))
+    eout = shard(eout, "batch", "experts", None, None)
+    out = jnp.einsum("ngec,necd->ngd", comb, eout)
+
+    if moe.n_shared:
+        sg = jnp.einsum("ngd,df->ngf", xt, params["shared_gate"].astype(dt))
+        su = jnp.einsum("ngd,df->ngf", xt, params["shared_up"].astype(dt))
+        sh = jnp.einsum("ngf,fd->ngd", jax.nn.silu(sg) * su,
+                        params["shared_down"].astype(dt))
+        mix = jax.nn.sigmoid(
+            jnp.einsum("ngd,do->ngo", xt, params["shared_mix"].astype(dt)))
+        out = out + mix * sh
+
+    return shard(out.reshape(B, S, D), "batch", "seq", "embed"), aux

@@ -1,0 +1,103 @@
+"""Griffin-style recurrent block (RecurrentGemma): causal conv + RG-LRU.
+
+The RG-LRU recurrence h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+is elementwise in the feature dimension, so it shards cleanly on the
+model axis and parallelizes over sequence with an associative scan
+(train/prefill) or carries (B, R) state (decode).
+
+Block layout (Griffin):  x -> [W_x -> conv4 -> RG-LRU] * gelu(W_y x) -> W_out
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import CONV, EMBED, MLP, ModelConfig, shard
+
+Array = jax.Array
+C_RGLRU = 8.0
+CONV_WIDTH = 4
+
+
+def init(pf, cfg: ModelConfig, prefix: str):
+    d = cfg.d_model
+    r = cfg.d_model            # lru width = d_model for recurrentgemma
+    return {
+        "w_x": pf.tensor(f"{prefix}.w_x", (d, r), (EMBED, MLP)),
+        "w_y": pf.tensor(f"{prefix}.w_y", (d, r), (EMBED, MLP)),
+        "conv_w": pf.tensor(f"{prefix}.conv_w", (CONV_WIDTH, r), (CONV, MLP)),
+        "conv_b": pf.tensor(f"{prefix}.conv_b", (r,), (MLP,), zero=True),
+        "w_a": pf.tensor(f"{prefix}.w_a", (r, r), (EMBED, MLP)),
+        "b_a": pf.tensor(f"{prefix}.b_a", (r,), (MLP,), zero=True),
+        "w_i": pf.tensor(f"{prefix}.w_i", (r, r), (EMBED, MLP)),
+        "b_i": pf.tensor(f"{prefix}.b_i", (r,), (MLP,), zero=True),
+        "lam": pf.tensor(f"{prefix}.lam", (r,), (MLP,), scale=1.0),
+        "w_out": pf.tensor(f"{prefix}.w_out", (r, d), (MLP, EMBED)),
+    }
+
+
+def make_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32,
+               shapes_only: bool = False):
+    r = cfg.d_model
+    mk = (lambda s, d: jax.ShapeDtypeStruct(s, d)) if shapes_only else \
+         (lambda s, d: jnp.zeros(s, d))
+    return {"h": mk((batch, r), jnp.float32),
+            "conv": mk((batch, CONV_WIDTH - 1, r), dtype)}
+
+
+def _conv4(x: Array, w: Array, b: Array, history: Array | None):
+    """Causal width-4 conv along S.  history: (B, 3, R) from decode cache."""
+    if history is None:
+        pad = jnp.zeros((x.shape[0], CONV_WIDTH - 1, x.shape[2]), x.dtype)
+    else:
+        pad = history.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, CONV_WIDTH - 1 - k: xp.shape[1] - k] * w[k].astype(x.dtype)
+              for k in range(CONV_WIDTH))
+    return out + b.astype(x.dtype), xp[:, -(CONV_WIDTH - 1):]
+
+
+def _gates(params, xi: Array):
+    r = jax.nn.sigmoid(xi @ params["w_a"].astype(xi.dtype)
+                       + params["b_a"].astype(xi.dtype))
+    i = jax.nn.sigmoid(xi @ params["w_i"].astype(xi.dtype)
+                       + params["b_i"].astype(xi.dtype))
+    log_a = -C_RGLRU * jax.nn.softplus(params["lam"].astype(jnp.float32)) \
+        * r.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b = mult * (i.astype(jnp.float32) * xi.astype(jnp.float32))
+    return a, b
+
+
+def run(params, x: Array, cfg: ModelConfig, *, mode: str, cache=None):
+    """x: (B,S,D) -> (out, new_cache)."""
+    dt = x.dtype
+    xi = x @ params["w_x"].astype(dt)
+    gate = jax.nn.gelu(x @ params["w_y"].astype(dt), approximate=True)
+    xi = shard(xi, "batch", None, "mlp")
+
+    if mode in ("train", "prefill"):
+        xi, conv_hist = _conv4(xi, params["conv_w"], params["conv_b"], None)
+        a, b = _gates(params, xi)
+
+        def combine(l, r):
+            return (l[0] * r[0], r[0] * l[1] + r[1])
+
+        _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+        new_cache = None
+        if mode == "prefill":
+            new_cache = {"h": h[:, -1].astype(jnp.float32),
+                         "conv": conv_hist.astype(jnp.float32)}
+        h = h.astype(dt)
+    else:
+        assert cache is not None and x.shape[1] == 1
+        xi, conv_hist = _conv4(xi, params["conv_w"], params["conv_b"],
+                               cache["conv"])
+        a, b = _gates(params, xi)
+        h_new = a[:, 0] * cache["h"] + b[:, 0]
+        new_cache = {"h": h_new, "conv": conv_hist.astype(jnp.float32)}
+        h = h_new[:, None, :].astype(dt)
+
+    out = (h * gate) @ params["w_out"].astype(dt)
+    return shard(out, "batch", "seq", "embed"), new_cache

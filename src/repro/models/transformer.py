@@ -1,0 +1,396 @@
+"""Assembles the 10 architectures from config: decoder-only LMs (dense,
+MoE, Griffin-hybrid, xLSTM), encoder-decoder (Seamless backbone), and the
+VLM backbone (patch-embedding stub + LM).
+
+Layers are stacked per repeating block-pattern group and executed with
+jax.lax.scan (one compiled group body regardless of depth); layers left
+over when n_layers % len(pattern) != 0 run unrolled after the scan.
+Remat (jax.checkpoint) wraps the group body for training.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import attention, mlp, moe, rglru, xlstm
+from .common import (EMBED, GROUPS, LAYERS, VOCAB, ModelConfig, ParamFactory,
+                     rms_norm, shard, softcap)
+
+Array = jax.Array
+PyTree = Any
+
+
+class _Stacked(ParamFactory):
+    """ParamFactory that prepends a group-stack dimension to every tensor."""
+
+    def __init__(self, base: ParamFactory, n_groups: int):
+        self.base = base
+        self.n_groups = n_groups
+        self.axes = base.axes
+
+    def tensor(self, name, shape, axes, scale=None, zero=False):
+        return self.base.tensor(name, (self.n_groups,) + tuple(shape),
+                                (GROUPS,) + tuple(axes), scale=scale, zero=zero)
+
+
+def _layer_init(pf, cfg: ModelConfig, kind: str, tp: int, prefix: str,
+                cross: bool = False):
+    p: dict = {"ln1": pf.tensor(f"{prefix}.ln1", (cfg.d_model,), (EMBED,),
+                                zero=True)}
+    if kind in ("attn", "attn_local"):
+        p["attn"] = attention.init(pf, cfg, tp, f"{prefix}.attn")
+        if cross:
+            p["ln_x"] = pf.tensor(f"{prefix}.ln_x", (cfg.d_model,), (EMBED,),
+                                  zero=True)
+            p["xattn"] = attention.init(pf, cfg, tp, f"{prefix}.xattn")
+        if cfg.mlp_kind != "none" or cfg.moe:
+            p["ln2"] = pf.tensor(f"{prefix}.ln2", (cfg.d_model,), (EMBED,),
+                                 zero=True)
+            p["ffn"] = (moe.init(pf, cfg, tp, f"{prefix}.moe") if cfg.moe
+                        else mlp.init(pf, cfg, f"{prefix}.mlp"))
+    elif kind == "rglru":
+        p["rec"] = rglru.init(pf, cfg, f"{prefix}.rglru")
+        p["ln2"] = pf.tensor(f"{prefix}.ln2", (cfg.d_model,), (EMBED,),
+                             zero=True)
+        p["ffn"] = mlp.init(pf, cfg, f"{prefix}.mlp")
+    elif kind == "mlstm":
+        p["cell"] = xlstm.init_mlstm(pf, cfg, f"{prefix}.mlstm")
+    elif kind == "slstm":
+        p["cell"] = xlstm.init_slstm(pf, cfg, f"{prefix}.slstm")
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def _split_layers(cfg: ModelConfig, n_layers: int):
+    """(pattern, n_groups, n_rem): scanned groups + unrolled remainder."""
+    pat = cfg.block_pattern
+    n_groups = n_layers // len(pat)
+    n_rem = n_layers - n_groups * len(pat)
+    return pat, n_groups, n_rem
+
+
+def init_params(cfg: ModelConfig, key=None, *, tp: int = 1,
+                shapes_only: bool = False, dtype=jnp.float32) -> PyTree:
+    pf = ParamFactory(key, dtype=dtype, shapes_only=shapes_only)
+    vp = cfg.padded_vocab(tp)
+    params: dict = {
+        # scale 1/sqrt(d): tied unembedding then produces O(1) logits and
+        # the embedding path re-scales by sqrt(d) (gemma convention)
+        "embed": pf.tensor("embed", (vp, cfg.d_model), (VOCAB, EMBED),
+                           scale=1.0 / cfg.d_model ** 0.5),
+        "final_ln": pf.tensor("final_ln", (cfg.d_model,), (EMBED,), zero=True),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = pf.tensor("unembed", (cfg.d_model, vp),
+                                      (EMBED, VOCAB))
+
+    pat, n_groups, n_rem = _split_layers(cfg, cfg.n_layers)
+    cross = cfg.family == "encdec"
+    spf = _Stacked(pf, n_groups)
+    params["groups"] = [
+        _layer_init(spf, cfg, kind, tp, f"g.{i}.{kind}", cross=cross)
+        for i, kind in enumerate(pat)]
+    params["rem"] = [
+        _layer_init(pf, cfg, kind, tp, f"rem.{i}.{kind}", cross=cross)
+        for i, kind in enumerate(pat[:n_rem])]
+
+    if cfg.family == "encdec":
+        # encoder: bidirectional attention stack over frame embeddings
+        enc_pat = ("attn",)
+        n_enc = cfg.n_enc_layers
+        epf = _Stacked(pf, n_enc)
+        params["enc_groups"] = [_layer_init(epf, cfg, "attn", tp, "enc")]
+        params["enc_ln"] = pf.tensor("enc_ln", (cfg.d_model,), (EMBED,),
+                                     zero=True)
+    if cfg.family == "vlm":
+        params["img_proj"] = pf.tensor("img_proj", (cfg.d_model, cfg.d_model),
+                                       (EMBED, EMBED))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# layer body
+# ---------------------------------------------------------------------------
+
+def _layer_apply(cfg: ModelConfig, kind: str, p, x, positions, *, mode,
+                 cache=None, memory=None, causal=True, impl="xla",
+                 max_len: int = 0):
+    """One layer.  Returns (x, new_cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = rms_norm(x, p["ln1"], cfg.rms_eps)
+    if kind in ("attn", "attn_local"):
+        akind = kind if causal else "attn"
+        if not causal:
+            # encoder: full bidirectional attention
+            out, nc = _bidir_attention(p["attn"], h, positions, cfg, impl)
+        else:
+            out, nc = attention.run(p["attn"], h, positions, cfg, kind=akind,
+                                    mode=mode, cache=None if cache is None
+                                    else cache.get("self"), impl=impl,
+                                    max_len=max_len)
+        x = x + out
+        new_cache = {"self": nc} if nc is not None else \
+            ({"self": cache["self"]} if cache else None)
+        if memory is not None and "xattn" in p:
+            hx = rms_norm(x, p["ln_x"], cfg.rms_eps)
+            out, _ = _cross_attention(p["xattn"], hx, memory, cfg)
+            x = x + out
+        if "ffn" in p:
+            h2 = rms_norm(x, p["ln2"], cfg.rms_eps)
+            if cfg.moe:
+                out, aux = moe.run(p["ffn"], h2, cfg)
+            else:
+                out = mlp.run(p["ffn"], h2, cfg)
+            x = x + out
+        if mode == "decode" and new_cache is None and cache is not None:
+            new_cache = cache
+    elif kind == "rglru":
+        out, nc = rglru.run(p["rec"], h, cfg, mode=mode,
+                            cache=None if cache is None else cache.get("rec"))
+        x = x + out
+        h2 = rms_norm(x, p["ln2"], cfg.rms_eps)
+        x = x + mlp.run(p["ffn"], h2, cfg)
+        new_cache = {"rec": nc} if nc is not None else None
+    elif kind == "mlstm":
+        out, nc = xlstm.run_mlstm(p["cell"], h, cfg, mode=mode,
+                                  cache=None if cache is None
+                                  else cache.get("cell"))
+        x = x + out
+        new_cache = {"cell": nc} if nc is not None else None
+    elif kind == "slstm":
+        out, nc = xlstm.run_slstm(p["cell"], h, cfg, mode=mode,
+                                  cache=None if cache is None
+                                  else cache.get("cell"))
+        x = x + out
+        new_cache = {"cell": nc} if nc is not None else None
+    else:
+        raise ValueError(kind)
+    return x, new_cache, aux
+
+
+def _bidir_attention(p, h, positions, cfg, impl):
+    B, S, _ = h.shape
+    q, k, v = attention._qkv(p, h, positions, cfg)
+    mask = jnp.ones((S, S), bool)
+    out = attention._sdpa(q, k, v, mask[None, None], cfg)
+    out = jnp.einsum("bshd,hdo->bso", out, p["wo"].astype(h.dtype))
+    return shard(out, "batch", "seq", "embed"), None
+
+
+def _cross_attention(p, h, memory, cfg):
+    """Decoder cross-attention onto encoder memory (B, S_enc, D)."""
+    dt = h.dtype
+    B, S, _ = h.shape
+    q = jnp.einsum("bsd,dhk->bshk", h, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", memory, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", memory, p["wv"].astype(dt))
+    mask = jnp.ones((S, k.shape[1]), bool)
+    out = attention._sdpa(q, k, v, mask[None, None], cfg)
+    out = jnp.einsum("bshd,hdo->bso", out, p["wo"].astype(dt))
+    return shard(out, "batch", "seq", "embed"), None
+
+
+# ---------------------------------------------------------------------------
+# full-model passes
+# ---------------------------------------------------------------------------
+
+def _embed(cfg, params, tokens):
+    x = params["embed"].astype(jnp.bfloat16)[tokens]
+    if cfg.tie_embeddings:
+        x = x * jnp.sqrt(jnp.asarray(cfg.d_model, jnp.float32)).astype(x.dtype)
+    return shard(x, "batch", "seq", "embed")
+
+
+def _unembed(cfg, params, x):
+    w = (params["embed"].astype(x.dtype).T if cfg.tie_embeddings
+         else params["unembed"].astype(x.dtype))
+    logits = jnp.einsum("bsd,dv->bsv", x, w)
+    return shard(logits, "batch", None, "vocab")
+
+
+def _run_stack(cfg, params, x, positions, *, mode, caches=None, memory=None,
+               causal=True, impl="xla", remat=False, max_len: int = 0,
+               unroll: bool = False):
+    """Scan over stacked groups + unrolled remainder.
+
+    caches: {"groups": [stacked per pattern-slot], "rem": [...]} or None."""
+    pat, n_groups, n_rem = _split_layers(cfg, cfg.n_layers)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    def group_body(x, group_params, group_caches):
+        new_caches = []
+        aux_sum = jnp.zeros((), jnp.float32)
+        for i, kind in enumerate(pat):
+            c = None if group_caches is None else group_caches[i]
+            x, nc, aux = _layer_apply(cfg, kind, group_params[i], x, positions,
+                                      mode=mode, cache=c, memory=memory,
+                                      causal=causal, impl=impl, max_len=max_len)
+            new_caches.append(nc)
+            aux_sum = aux_sum + aux
+        return x, new_caches, aux_sum
+
+    if remat:
+        group_body = jax.checkpoint(group_body,
+                                    policy=jax.checkpoint_policies.nothing_saveable)
+
+    if n_groups > 0 and unroll:
+        # unrolled group loop: identical math to the scan path; exists so
+        # compiled.cost_analysis() counts every layer (XLA's HloCostAnalysis
+        # visits while-loop bodies once) — the roofline measurement path.
+        ncs_all = []
+        for gi in range(n_groups):
+            gp = jax.tree.map(lambda l: l[gi], params["groups"])
+            gc = (None if caches is None else
+                  jax.tree.map(lambda l: l[gi], caches["groups"]))
+            x, ncs, aux = group_body(x, gp, gc)
+            aux_total = aux_total + aux
+            ncs_all.append(ncs)
+        new_group_caches = (jax.tree.map(lambda *ls: jnp.stack(ls), *ncs_all)
+                            if ncs_all and ncs_all[0] is not None and
+                            any(l is not None for l in jax.tree.leaves(
+                                ncs_all[0], is_leaf=lambda z: z is None))
+                            else None)
+    elif n_groups > 0:
+        def scan_fn(carry, inp):
+            x, aux_acc = carry
+            gp, gc = inp
+            x, ncs, aux = group_body(x, gp, gc)
+            return (x, aux_acc + aux), ncs
+
+        if caches is None:
+            (x, aux_total), new_group_caches = jax.lax.scan(
+                lambda c, gp: scan_fn(c, (gp, None)),
+                (x, aux_total), params["groups"])
+        else:
+            (x, aux_total), new_group_caches = jax.lax.scan(
+                scan_fn, (x, aux_total), (params["groups"], caches["groups"]))
+    else:
+        new_group_caches = None
+
+    new_rem = []
+    for i, kind in enumerate(pat[:n_rem]):
+        c = None if caches is None else caches["rem"][i]
+        x, nc, aux = _layer_apply(cfg, kind, params["rem"][i], x, positions,
+                                  mode=mode, cache=c, memory=memory,
+                                  causal=causal, impl=impl, max_len=max_len)
+        new_rem.append(nc)
+        aux_total = aux_total + aux
+
+    new_caches = None
+    if mode in ("prefill", "decode"):
+        new_caches = {"groups": new_group_caches, "rem": new_rem}
+    return x, new_caches, aux_total
+
+
+def _encode(cfg, params, enc_embeds, impl="xla"):
+    """Encoder stack over precomputed frame embeddings (B, S_enc, D)."""
+    x = shard(enc_embeds.astype(jnp.bfloat16), "batch", "seq", "embed")
+    S = x.shape[1]
+    positions = jnp.arange(S)[None, :]
+
+    def scan_fn(x, gp):
+        x, _, _ = _layer_apply(cfg, "attn", gp, x, positions, mode="train",
+                               causal=False, impl=impl)
+        return x, None
+
+    x, _ = jax.lax.scan(scan_fn, x, params["enc_groups"][0])
+    return rms_norm(x, params["enc_ln"], cfg.rms_eps)
+
+
+def train_logits(cfg: ModelConfig, params, batch, *, impl="xla",
+                 remat=True, unroll=False):
+    """Full training forward.  batch: {"tokens": (B,S) int32, ...family
+    extras}.  Returns (logits (B,S,Vp), aux)."""
+    tokens = batch["tokens"]
+    x = _embed(cfg, params, tokens)
+    memory = None
+    if cfg.family == "encdec":
+        memory = _encode(cfg, params, batch["enc_embeds"], impl)
+    if cfg.family == "vlm":
+        img = batch["img_embeds"].astype(x.dtype) @ params["img_proj"].astype(x.dtype)
+        x = jnp.concatenate([shard(img, "batch", "seq", "embed"), x], axis=1)
+    B, S, _ = x.shape
+    positions = jnp.arange(S)[None, :]
+    x, _, aux = _run_stack(cfg, params, x, positions, mode="train",
+                           memory=memory, impl=impl, remat=remat,
+                           unroll=unroll)
+    x = rms_norm(x, params["final_ln"], cfg.rms_eps)
+    if cfg.family == "vlm":
+        x = x[:, -tokens.shape[1]:]
+    logits = _unembed(cfg, params, x)
+    return softcap(logits, cfg.final_softcap), aux
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, *, tp: int = 1,
+               shapes_only: bool = False):
+    """Caches for decode, matching the group/remainder structure."""
+    pat, n_groups, n_rem = _split_layers(cfg, cfg.n_layers)
+
+    def one(kind, stacked: int | None):
+        def mk(fn, *a, **kw):
+            c = fn(*a, **kw)
+            if stacked is None:
+                return c
+            return jax.tree.map(
+                lambda l: (jax.ShapeDtypeStruct((stacked,) + l.shape, l.dtype)
+                           if shapes_only else
+                           jnp.broadcast_to(l[None], (stacked,) + l.shape).copy()),
+                c)
+        if kind == "attn":
+            return {"self": mk(attention.make_cache, cfg, batch, max_len, tp,
+                               "full", shapes_only=shapes_only)}
+        if kind == "attn_local":
+            return {"self": mk(attention.make_cache, cfg, batch, max_len, tp,
+                               "window", shapes_only=shapes_only)}
+        if kind == "rglru":
+            return {"rec": mk(rglru.make_cache, cfg, batch,
+                              shapes_only=shapes_only)}
+        if kind == "mlstm":
+            return {"cell": mk(xlstm.make_mlstm_cache, cfg, batch,
+                               shapes_only=shapes_only)}
+        if kind == "slstm":
+            return {"cell": mk(xlstm.make_slstm_cache, cfg, batch,
+                               shapes_only=shapes_only)}
+        raise ValueError(kind)
+
+    return {"groups": [one(k, n_groups) for k in pat],
+            "rem": [one(k, None) for k in pat[:n_rem]]}
+
+
+def prefill(cfg: ModelConfig, params, batch, *, impl="xla", max_len: int = 0,
+            unroll=False):
+    """Prefill pass: returns (last-token logits, caches)."""
+    tokens = batch["tokens"]
+    x = _embed(cfg, params, tokens)
+    memory = None
+    if cfg.family == "encdec":
+        memory = _encode(cfg, params, batch["enc_embeds"], impl)
+    if cfg.family == "vlm":
+        img = batch["img_embeds"].astype(x.dtype) @ params["img_proj"].astype(x.dtype)
+        x = jnp.concatenate([shard(img, "batch", "seq", "embed"), x], axis=1)
+    S = x.shape[1]
+    positions = jnp.arange(S)[None, :]
+    x, caches, _ = _run_stack(cfg, params, x, positions, mode="prefill",
+                              memory=memory, impl=impl,
+                              max_len=max_len or S + 1, unroll=unroll)
+    x = rms_norm(x[:, -1:], params["final_ln"], cfg.rms_eps)
+    logits = _unembed(cfg, params, x)
+    return softcap(logits, cfg.final_softcap), caches
+
+
+def decode_step(cfg: ModelConfig, params, caches, tokens, position, *,
+                memory=None, impl="xla", unroll=False):
+    """One decode step.  tokens: (B, 1); position: scalar absolute index.
+    Returns (logits (B,1,Vp), new caches)."""
+    x = _embed(cfg, params, tokens)
+    positions = jnp.full((1, 1), position, jnp.int32)
+    x, new_caches, _ = _run_stack(cfg, params, x, positions, mode="decode",
+                                  caches=caches, memory=memory, impl=impl,
+                                  unroll=unroll)
+    x = rms_norm(x, params["final_ln"], cfg.rms_eps)
+    logits = _unembed(cfg, params, x)
+    return softcap(logits, cfg.final_softcap), new_caches

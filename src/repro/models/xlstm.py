@@ -1,0 +1,273 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory, sequential scan) — arXiv:2405.04517.
+
+mLSTM uses exponential input gates and sigmoid forget gates with running
+max-stabilization.  Training/prefill uses the chunkwise-parallel form
+(intra-chunk attention-like + inter-chunk recurrent state), decode the
+pure recurrence.  The block is 7:1 mLSTM:sLSTM as in the paper's 1.3B.
+
+Block layouts (official xLSTM):
+  mLSTM: up-proj x2 (pf=2) -> conv4 -> q,k,v -> cell -> groupnorm
+         -> * silu(gate branch) -> down-proj
+  sLSTM: conv4 -> cell (block-diag recurrent R over heads) -> groupnorm
+         -> gated FFN (pf=4/3)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import CONV, EMBED, HEADS, HEAD_DIM, MLP, ModelConfig, shard
+from .rglru import CONV_WIDTH, _conv4
+
+Array = jax.Array
+CHUNK = 256
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm(pf, cfg: ModelConfig, prefix: str):
+    d = cfg.d_model
+    h = cfg.n_heads
+    dm = 2 * d                   # projection factor 2
+    hd = dm // h
+    return {
+        "w_up": pf.tensor(f"{prefix}.w_up", (d, dm), (EMBED, MLP)),
+        "w_gate": pf.tensor(f"{prefix}.w_gate", (d, dm), (EMBED, MLP)),
+        "conv_w": pf.tensor(f"{prefix}.conv_w", (CONV_WIDTH, dm), (CONV, MLP)),
+        "conv_b": pf.tensor(f"{prefix}.conv_b", (dm,), (MLP,), zero=True),
+        "w_q": pf.tensor(f"{prefix}.w_q", (dm, h, hd), (MLP, HEADS, HEAD_DIM)),
+        "w_k": pf.tensor(f"{prefix}.w_k", (dm, h, hd), (MLP, HEADS, HEAD_DIM)),
+        "w_v": pf.tensor(f"{prefix}.w_v", (dm, h, hd), (MLP, HEADS, HEAD_DIM)),
+        "w_i": pf.tensor(f"{prefix}.w_i", (dm, h), (MLP, HEADS)),
+        "b_i": pf.tensor(f"{prefix}.b_i", (h,), (HEADS,), zero=True),
+        "w_f": pf.tensor(f"{prefix}.w_f", (dm, h), (MLP, HEADS)),
+        "b_f": pf.tensor(f"{prefix}.b_f", (h,), (HEADS,), scale=1.0),
+        "gn": pf.tensor(f"{prefix}.gn", (dm,), (MLP,), zero=True),
+        "w_down": pf.tensor(f"{prefix}.w_down", (dm, d), (MLP, EMBED)),
+    }
+
+
+def make_mlstm_cache(cfg: ModelConfig, batch: int, shapes_only=False):
+    h = cfg.n_heads
+    hd = 2 * cfg.d_model // h
+    mk = (lambda s, d: jax.ShapeDtypeStruct(s, d)) if shapes_only else \
+         (lambda s, d: jnp.zeros(s, d))
+    return {"S": mk((batch, h, hd, hd), jnp.float32),
+            "n": mk((batch, h, hd), jnp.float32),
+            "m": mk((batch, h), jnp.float32),
+            "conv": mk((batch, CONV_WIDTH - 1, 2 * cfg.d_model), jnp.float32)}
+
+
+def _group_norm(x: Array, w: Array, heads: int, eps: float = 1e-6) -> Array:
+    """Per-head group norm over the head_dim features.  x: (B,S,H,hd)."""
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(axis=-1, keepdims=True)
+    var = xf.var(axis=-1, keepdims=True)
+    xn = (xf - mu) * jax.lax.rsqrt(var + eps)
+    B, S, H, hd = x.shape
+    return (xn.reshape(B, S, H * hd)
+            * (1.0 + w.astype(jnp.float32))).astype(x.dtype)
+
+
+def _mlstm_chunk(q, k, v, logf, logi, state):
+    """One chunk of the stabilized chunkwise mLSTM.
+
+    q,k,v: (B,H,L,hd); logf/logi: (B,H,L); state (S,n,m) carried."""
+    S_p, n_p, m_p = state
+    B, H, L, hd = q.shape
+    b = jnp.cumsum(logf, axis=-1)                       # (B,H,L) log decay
+    # stabilizer per position: max over (inter, intra j<=i)
+    intra_term = b[..., :, None] - b[..., None, :] + logi[..., None, :]
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    intra_term = jnp.where(tri, intra_term, -jnp.inf)
+    m_intra = intra_term.max(axis=-1)                   # (B,H,L)
+    m_i = jnp.maximum(m_p[..., None] + b, m_intra)      # (B,H,L)
+
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    scores = jnp.einsum("bhld,bhmd->bhlm", q, k) * scale
+    w_ij = jnp.exp(intra_term - m_i[..., None])
+    num_intra = jnp.einsum("bhlm,bhmd->bhld", scores * w_ij, v)
+    # denominator: |q . n_i|; n_i = sum_j w_ij k_j + inter part
+    n_intra = jnp.einsum("bhlm,bhmd->bhld", w_ij, k)
+
+    w_inter = jnp.exp(m_p[..., None] + b - m_i)         # (B,H,L)
+    num_inter = jnp.einsum("bhld,bhde->bhle", q, S_p) * w_inter[..., None] * scale
+    n_inter = n_p[:, :, None, :] * w_inter[..., None]
+
+    num = num_intra + num_inter
+    nvec = n_intra + n_inter
+    den = jnp.abs(jnp.einsum("bhld,bhld->bhl", q, nvec)) * scale
+    h = num / jnp.maximum(den, jnp.exp(-m_i))[..., None]
+
+    # state update to end of chunk
+    m_new = jnp.maximum(m_p + b[..., -1],
+                        (b[..., -1:] - b + logi).max(axis=-1))
+    w_upd = jnp.exp(b[..., -1:] - b + logi - m_new[..., None])  # (B,H,L)
+    S_new = (S_p * jnp.exp(m_p + b[..., -1] - m_new)[..., None, None]
+             + jnp.einsum("bhl,bhld,bhle->bhde", w_upd, k, v))
+    n_new = (n_p * jnp.exp(m_p + b[..., -1] - m_new)[..., None]
+             + jnp.einsum("bhl,bhld->bhd", w_upd, k))
+    return h, (S_new, n_new, m_new)
+
+
+def run_mlstm(params, x: Array, cfg: ModelConfig, *, mode: str, cache=None):
+    dt = x.dtype
+    B, S, D = x.shape
+    H = cfg.n_heads
+    up = x @ params["w_up"].astype(dt)
+    gate = x @ params["w_gate"].astype(dt)
+    hist = cache["conv"] if mode == "decode" else None
+    ci, conv_hist = _conv4(up, params["conv_w"], params["conv_b"], hist)
+    ci = jax.nn.silu(ci)
+
+    q = jnp.einsum("bsd,dhk->bhsk", ci, params["w_q"].astype(dt)).astype(jnp.float32)
+    k = jnp.einsum("bsd,dhk->bhsk", ci, params["w_k"].astype(dt)).astype(jnp.float32)
+    v = jnp.einsum("bsd,dhk->bhsk", ci, params["w_v"].astype(dt)).astype(jnp.float32)
+    logi = (jnp.einsum("bsd,dh->bhs", ci, params["w_i"].astype(dt))
+            + params["b_i"].astype(dt)[None, :, None]).astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(
+        (jnp.einsum("bsd,dh->bhs", ci, params["w_f"].astype(dt))
+         + params["b_f"].astype(dt)[None, :, None]).astype(jnp.float32))
+
+    hd = q.shape[-1]
+    if mode in ("train", "prefill"):
+        L = min(CHUNK, S)
+        n_chunks = max(S // L, 1)
+        assert S % L == 0, f"seq {S} not divisible by chunk {L}"
+        qs = q.reshape(B, H, n_chunks, L, hd).transpose(2, 0, 1, 3, 4)
+        ks = k.reshape(B, H, n_chunks, L, hd).transpose(2, 0, 1, 3, 4)
+        vs = v.reshape(B, H, n_chunks, L, hd).transpose(2, 0, 1, 3, 4)
+        fis = logf.reshape(B, H, n_chunks, L).transpose(2, 0, 1, 3)
+        iis = logi.reshape(B, H, n_chunks, L).transpose(2, 0, 1, 3)
+        state0 = (jnp.zeros((B, H, hd, hd), jnp.float32),
+                  jnp.zeros((B, H, hd), jnp.float32),
+                  jnp.full((B, H), -1e30, jnp.float32))
+
+        def step(state, inp):
+            qc, kc, vc, fc, ic = inp
+            h, state = _mlstm_chunk(qc, kc, vc, fc, ic, state)
+            return state, h
+
+        state, hs = jax.lax.scan(step, state0, (qs, ks, vs, fis, iis))
+        h = hs.transpose(1, 2, 0, 3, 4).reshape(B, H, S, hd)
+        new_cache = None
+        if mode == "prefill":
+            new_cache = {"S": state[0], "n": state[1], "m": state[2],
+                         "conv": conv_hist.astype(jnp.float32)}
+    else:
+        assert cache is not None and S == 1
+        S_p, n_p, m_p = cache["S"], cache["n"], cache["m"]
+        lf, li = logf[..., 0], logi[..., 0]
+        m_new = jnp.maximum(lf + m_p, li)
+        fp = jnp.exp(lf + m_p - m_new)
+        ip = jnp.exp(li - m_new)
+        kt, vt, qt = k[:, :, 0], v[:, :, 0], q[:, :, 0]
+        S_new = fp[..., None, None] * S_p + ip[..., None, None] * \
+            jnp.einsum("bhd,bhe->bhde", kt, vt)
+        n_new = fp[..., None] * n_p + ip[..., None] * kt
+        scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+        num = jnp.einsum("bhd,bhde->bhe", qt, S_new) * scale
+        den = jnp.abs(jnp.einsum("bhd,bhd->bh", qt, n_new)) * scale
+        h = (num / jnp.maximum(den, jnp.exp(-m_new))[..., None])[:, :, None, :]
+        new_cache = {"S": S_new, "n": n_new, "m": m_new,
+                     "conv": conv_hist.astype(jnp.float32)}
+
+    h = h.transpose(0, 2, 1, 3)                          # (B,S,H,hd)
+    h = _group_norm(h, params["gn"], H).astype(dt)       # (B,S,2D)
+    out = (h * jax.nn.silu(gate)) @ params["w_down"].astype(dt)
+    return shard(out, "batch", "seq", "embed"), new_cache
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(pf, cfg: ModelConfig, prefix: str):
+    d = cfg.d_model
+    h = cfg.n_heads
+    hd = d // h
+    p = {
+        "conv_w": pf.tensor(f"{prefix}.conv_w", (CONV_WIDTH, d), (CONV, MLP)),
+        "conv_b": pf.tensor(f"{prefix}.conv_b", (d,), (MLP,), zero=True),
+        "gn": pf.tensor(f"{prefix}.gn", (d,), (MLP,), zero=True),
+        "w_ff1": pf.tensor(f"{prefix}.w_ff1", (d, d * 4 // 3), (EMBED, MLP)),
+        "w_ff1g": pf.tensor(f"{prefix}.w_ff1g", (d, d * 4 // 3), (EMBED, MLP)),
+        "w_ff2": pf.tensor(f"{prefix}.w_ff2", (d * 4 // 3, d), (MLP, EMBED)),
+    }
+    for g in ("z", "i", "f", "o"):
+        p[f"w_{g}"] = pf.tensor(f"{prefix}.w_{g}", (d, d), (EMBED, MLP))
+        p[f"r_{g}"] = pf.tensor(f"{prefix}.r_{g}", (h, hd, hd),
+                                (HEADS, HEAD_DIM, HEAD_DIM))
+        p[f"b_{g}"] = pf.tensor(f"{prefix}.b_{g}", (d,), (MLP,), zero=True)
+    return p
+
+
+def make_slstm_cache(cfg: ModelConfig, batch: int, shapes_only=False):
+    d = cfg.d_model
+    mk = (lambda s, dt: jax.ShapeDtypeStruct(s, dt)) if shapes_only else \
+         (lambda s, dt: jnp.zeros(s, dt))
+    return {"c": mk((batch, d), jnp.float32), "n": mk((batch, d), jnp.float32),
+            "h": mk((batch, d), jnp.float32), "m": mk((batch, d), jnp.float32),
+            "conv": mk((batch, CONV_WIDTH - 1, d), jnp.float32)}
+
+
+def _slstm_cell(params, xt, state, heads: int):
+    """One timestep.  xt: (B, D) pre-activations stacked later."""
+    c, n, h, m = state
+    B, D = xt.shape
+    hd = D // heads
+
+    def rmul(name, hh):
+        r = params[f"r_{name}"].astype(jnp.float32)
+        return jnp.einsum("bhd,hde->bhe", hh.reshape(B, heads, hd),
+                          r).reshape(B, D)
+
+    def pre(name):
+        return (xt @ params[f"w_{name}"].astype(xt.dtype)).astype(jnp.float32) \
+            + rmul(name, h) + params[f"b_{name}"].astype(jnp.float32)
+
+    z = jnp.tanh(pre("z"))
+    o = jax.nn.sigmoid(pre("o"))
+    itil = pre("i")
+    ftil = jax.nn.log_sigmoid(pre("f"))
+    m_new = jnp.maximum(ftil + m, itil)
+    ip = jnp.exp(itil - m_new)
+    fp = jnp.exp(ftil + m - m_new)
+    c_new = fp * c + ip * z
+    n_new = fp * n + ip
+    h_new = o * c_new / jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, h_new, m_new), h_new
+
+
+def run_slstm(params, x: Array, cfg: ModelConfig, *, mode: str, cache=None):
+    dt = x.dtype
+    B, S, D = x.shape
+    H = cfg.n_heads
+    hist = cache["conv"] if mode == "decode" else None
+    ci, conv_hist = _conv4(x, params["conv_w"], params["conv_b"], hist)
+    ci = jax.nn.silu(ci)
+
+    if mode == "decode":
+        state = (cache["c"], cache["n"], cache["h"], cache["m"])
+    else:
+        z = jnp.zeros((B, D), jnp.float32)
+        state = (z, z, z, jnp.full((B, D), -1e30, jnp.float32))
+
+    def step(st, xt):
+        return _slstm_cell(params, xt, st, H)
+
+    state, hs = jax.lax.scan(step, state, ci.transpose(1, 0, 2))
+    h = hs.transpose(1, 0, 2)                            # (B,S,D)
+    new_cache = None
+    if mode == "prefill" or mode == "decode":
+        new_cache = {"c": state[0], "n": state[1], "h": state[2],
+                     "m": state[3], "conv": conv_hist.astype(jnp.float32)}
+
+    h = _group_norm(h.reshape(B, S, H, D // H), params["gn"], H).astype(dt)
+    up = h @ params["w_ff1"].astype(dt)
+    gate = h @ params["w_ff1g"].astype(dt)
+    out = (jax.nn.gelu(gate, approximate=True) * up) @ params["w_ff2"].astype(dt)
+    return shard(out, "batch", "seq", "embed"), new_cache

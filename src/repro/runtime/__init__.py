@@ -1,0 +1,4 @@
+"""Distributed runtime: sharding rules, scheduled collectives, steps."""
+from . import collectives, sharding, steps
+
+__all__ = ["collectives", "sharding", "steps"]

@@ -1,0 +1,62 @@
+"""Gradient compression for DP reduces: int8 quantization with error
+feedback (1-bit-Adam-style residual carrying).
+
+At 1000+ nodes the DP gradient reduce-scatter is the largest recurring
+co-flow; quantizing payloads to int8 cuts its bytes-on-wire 4x (f32) /
+2x (bf16) and the co-flow planner sees proportionally smaller buckets.
+Error feedback keeps the quantization noise unbiased across steps:
+    q_t = Q(g_t + e_t);  e_{t+1} = (g_t + e_t) - q_t
+so the accumulated update converges to the true gradient sum.
+
+Pure-JAX, per-leaf block scaling (block = last axis) — jit/shard-map
+friendly and exactly invertible at the scales it emits.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def quantize(g: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-row symmetric int8.  Returns (q int8, scale f32)."""
+    gf = g.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(gf), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def init_error(params: PyTree) -> PyTree:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_grads(grads: PyTree, error: PyTree):
+    """Returns (quantized payload tree {q, scale}, new error feedback)."""
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, s = quantize(corrected)
+        return {"q": q, "scale": s}, corrected - dequantize(q, s)
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = tdef.flatten_up_to(error)
+    pairs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    payload = tdef.unflatten([p[0] for p in pairs])
+    new_err = tdef.unflatten([p[1] for p in pairs])
+    return payload, new_err
+
+
+def decompress_grads(payload: PyTree) -> PyTree:
+    return jax.tree.map(lambda p: dequantize(p["q"], p["scale"]),
+                        payload, is_leaf=lambda x: isinstance(x, dict)
+                        and "q" in x)
+
+
+def compressed_bytes(payload: PyTree) -> int:
+    return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(payload))

@@ -1,0 +1,279 @@
+"""Sharding strategies: map model params/activations onto the mesh.
+
+Two strategies (ModelConfig.sharding):
+
+  "2d"   : FSDP x TP — weights shard TP dims (heads / d_ff / vocab /
+           experts) on "model" and d_model on "data" (FSDP); activations
+           shard batch on "data" (x "pod") and the residual stream's
+           sequence dim on "model" between layers (SP).
+  "fsdp" : ZeRO-3 — every weight shards its largest divisible dim across
+           as many mesh axes as possible; activations shard batch across
+           ("data","model") jointly.  Used by xLSTM (4-head matrix memory
+           does not TP-shard; see DESIGN.md §5).
+
+Specs are derived from tree paths: terminal parameter names are unique
+per layer type, and anything under "groups" carries a leading stack dim.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import common as mcommon
+
+PyTree = Any
+
+# terminal param name -> logical dim layout (no group dim; group handled
+# separately).  d = d_model-like (FSDP), m = TP dim ("model"), v = vocab,
+# e = experts, . = replicated.
+_LAYOUTS_2D = {
+    "embed": "vd",      # vocab on model, d on data
+    "unembed": "dv",
+    "wq": "dm.", "wk": "dm.", "wv": "dm.", "wo": "m.d",
+    "w_up": "dm", "w_gate": "dm", "w_down": "md",
+    "router": "dm",
+    # MoE expert stacks (E, D, F) / (E, F, D)
+    "moe_gate": "ed.", "moe_up": "ed.", "moe_down": "e.d",
+    "shared_gate": "dm", "shared_up": "dm", "shared_down": "md",
+    "shared_mix": "d.",
+    # rglru
+    "w_x": "dm", "w_y": "dm", "w_a": ".m", "w_i": ".m", "w_out": "md",
+    "conv_w": ".m", "conv_b": "m", "b_a": "m", "b_i": "m", "lam": "m",
+    # xlstm (only reached under "2d" if configured; default fsdp)
+    "w_q": "dm.", "w_k": "dm.", "w_v": "dm.",
+    "w_f": "d.", "b_f": ".", "gn": "m",
+    "w_z": "dm", "r_z": "...", "b_z": "m",
+    "w_o": "dm", "r_o": "...", "b_o": "m",
+    "w_ff1": "dm", "w_ff1g": "dm", "w_ff2": "md",
+    "img_proj": "dd:",  # (D, D): shard second on model
+}
+
+_CHAR_TO_AXIS_2D = {"d": "data", "m": "model", "v": "model", "e": "model",
+                    ".": None}
+
+
+def _is_moe_path(path) -> bool:
+    keys = [getattr(k, "key", None) for k in path]
+    return "ffn" in keys and any(
+        getattr(k, "key", None) in ("w_gate", "w_up", "w_down") for k in path)
+
+
+@dataclasses.dataclass
+class Strategy:
+    mesh: Mesh
+    kind: str                       # "2d" | "fsdp"
+    multi_pod: bool
+    # sequence parallelism: shard the residual stream's seq dim on "model"
+    # between blocks (perf lever, see EXPERIMENTS.md §Perf)
+    sp: bool = False
+
+    @property
+    def batch_axes(self):
+        if self.kind == "fsdp":
+            return (("pod", "data", "model") if self.multi_pod
+                    else ("data", "model"))
+        return (("pod", "data") if self.multi_pod else ("data",))
+
+    @property
+    def tp(self) -> int:
+        return (self.mesh.shape["model"] if self.kind == "2d"
+                and "model" in self.mesh.shape else 1)
+
+    def axis_size(self, name: str) -> int:
+        return self.mesh.shape.get(name, 1)
+
+    # ------------------------------------------------------------------
+    def logical_to_spec(self, axes: tuple, shape: tuple[int, ...]) -> P:
+        """Map logical activation axes to a PartitionSpec (used by the
+        activation sharder)."""
+        out = []
+        for a, dim in zip(axes, shape):
+            if a == "batch":
+                ax = self.batch_axes
+                while ax and not self._divisible(dim, ax):
+                    ax = ax[:-1]     # drop trailing axes until divisible
+                out.append(ax if len(ax) > 1 else (ax[0] if ax else None))
+            elif a == "seq":
+                out.append("model" if self.sp and self.kind == "2d"
+                           and dim % self.axis_size("model") == 0 else None)
+            elif a in ("heads", "kv_heads", "mlp", "vocab", "experts"):
+                out.append("model" if self.kind == "2d"
+                           and dim % self.axis_size("model") == 0 else None)
+            elif a == "embed":
+                out.append(None)
+            else:
+                out.append(None)
+        # a mesh axis may appear at most once per spec: first dim wins
+        seen: set = set()
+        for i, ax in enumerate(out):
+            axs = ax if isinstance(ax, tuple) else (ax,)
+            if any(a in seen for a in axs if a):
+                out[i] = None
+            else:
+                seen.update(a for a in axs if a)
+        return P(*out)
+
+    def _divisible(self, dim: int, axes) -> bool:
+        n = int(np.prod([self.axis_size(a) for a in
+                         (axes if isinstance(axes, tuple) else (axes,))]))
+        return dim % n == 0
+
+    # ------------------------------------------------------------------
+    def param_spec(self, path, leaf) -> P:
+        keys = [getattr(k, "key", str(getattr(k, "idx", k))) for k in path]
+        name = None
+        for k in reversed(keys):
+            if isinstance(k, str) and not k.isdigit():
+                name = k
+                break
+        stacked = "groups" in keys or "enc_groups" in keys
+        shape = leaf.shape
+        core = shape[1:] if stacked else shape
+
+        if self.kind == "fsdp":
+            spec = self._fsdp_spec(core)
+        else:
+            layout = _LAYOUTS_2D.get(name)
+            if name in ("w_gate", "w_up", "w_down") and len(core) == 3:
+                layout = {"w_gate": "ed.", "w_up": "ed.",
+                          "w_down": "e.d"}[name]
+            if name == "img_proj":
+                layout = "d."
+            if layout is None or len(layout.replace(":", "")) != len(core):
+                spec = self._fsdp_spec(core)        # fallback: best-effort
+            else:
+                out = []
+                for ch, dim in zip(layout.replace(":", ""), core):
+                    ax = _CHAR_TO_AXIS_2D[ch]
+                    if ax is not None and dim % self.axis_size(ax) != 0:
+                        ax = None
+                    out.append(ax)
+                # avoid duplicate mesh axes in one spec
+                seen = set()
+                for i, ax in enumerate(out):
+                    if ax in seen:
+                        out[i] = None
+                    elif ax is not None:
+                        seen.add(ax)
+                spec = P(*out)
+
+        if stacked:
+            spec = P(None, *spec)
+        return spec
+
+    def _fsdp_spec(self, core) -> P:
+        """Shard the largest dim across as many axes as divide it."""
+        if not core:
+            return P()
+        order = sorted(range(len(core)), key=lambda i: -core[i])
+        axes_avail = [a for a in ("data", "model", "pod")
+                      if a in self.mesh.shape]
+        out: list = [None] * len(core)
+        used: set = set()
+        for i in order:
+            dim = core[i]
+            best: tuple = ()
+            n = 1
+            for a in axes_avail:
+                if a in used:
+                    continue
+                if dim % (n * self.axis_size(a)) == 0:
+                    best = best + (a,)
+                    n *= self.axis_size(a)
+            if best:
+                out[i] = best if len(best) > 1 else best[0]
+                used.update(best)
+        return P(*out)
+
+    # ------------------------------------------------------------------
+    def specs_for(self, tree: PyTree) -> PyTree:
+        return jax.tree_util.tree_map_with_path(self.param_spec, tree)
+
+    def shardings_for(self, tree: PyTree) -> PyTree:
+        return jax.tree_util.tree_map_with_path(
+            lambda p, l: NamedSharding(self.mesh, self.param_spec(p, l)), tree)
+
+    def batch_spec(self, batch_shape_tree: PyTree) -> PyTree:
+        def spec(leaf):
+            if leaf.ndim == 0:
+                return P()
+            dim = leaf.shape[0]
+            ax = self.batch_axes
+            while ax and not self._divisible(dim, ax):
+                ax = ax[:-1]
+            return P(ax if len(ax) > 1 else (ax[0] if ax else None),
+                     *([None] * (leaf.ndim - 1)))
+        return jax.tree.map(spec, batch_shape_tree)
+
+    def cache_spec(self, cache_tree: PyTree) -> PyTree:
+        """KV caches: batch on data(+pod), kv-head dim on model (2d)."""
+        def spec(path, leaf):
+            keys = [getattr(k, "key", None) for k in path]
+            stacked = "groups" in keys
+            shape = leaf.shape[1:] if stacked else leaf.shape
+            name = next((k for k in reversed(keys) if isinstance(k, str)), "")
+            out: list = [None] * len(shape)
+            if len(shape) == 0:
+                return P() if not stacked else P(None)
+            ax = self.batch_axes
+            bdim = shape[0]
+            axl = ax
+            while axl and not self._divisible(bdim, axl):
+                axl = axl[:-1]
+            if axl:
+                out[0] = axl if len(axl) > 1 else axl[0]
+            if self.kind == "2d" and name in ("k", "v") and len(shape) == 4:
+                if shape[2] % self.axis_size("model") == 0:
+                    out[2] = "model"
+            elif self.kind == "2d" and name in ("S", "n", "h", "c", "m",
+                                                "conv") and len(shape) >= 2:
+                # recurrent states: feature dim on model when divisible
+                fd = shape[-1]
+                if fd % self.axis_size("model") == 0:
+                    out[-1] = "model"
+            if stacked:
+                out = [None] + out
+            return P(*out)
+        return jax.tree_util.tree_map_with_path(spec, cache_tree)
+
+
+    def compute_spec(self, path, leaf) -> P:
+        """Spec of a param as CONSUMED by compute: TP ("model") entries
+        kept, FSDP ("data"/"pod") entries dropped.  Annotating params
+        with this at step entry makes XLA all-gather each weight once
+        (ZeRO-3) instead of all-reducing activation partial sums on every
+        matmul — see EXPERIMENTS.md §Perf iteration 2."""
+        spec = self.param_spec(path, leaf)
+        drop = {"data", "pod"}
+
+        def keep(ax):
+            if ax is None:
+                return None
+            if isinstance(ax, tuple):
+                kept = tuple(a for a in ax if a not in drop)
+                return kept if len(kept) > 1 else (kept[0] if kept else None)
+            return None if ax in drop else ax
+        return P(*[keep(a) for a in spec])
+
+    def gather_for_compute(self, params: PyTree) -> PyTree:
+        return jax.tree_util.tree_map_with_path(
+            lambda p, l: jax.lax.with_sharding_constraint(
+                l, NamedSharding(self.mesh, self.compute_spec(p, l))), params)
+
+
+def install_sharder(strategy: Strategy | None) -> None:
+    """Hook models.common.shard to emit with_sharding_constraint."""
+    if strategy is None:
+        mcommon.set_sharder(None)
+        return
+
+    def sharder(x, axes):
+        spec = strategy.logical_to_spec(axes, x.shape)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(strategy.mesh, spec))
+    mcommon.set_sharder(sharder)

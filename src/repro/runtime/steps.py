@@ -1,0 +1,118 @@
+"""Step factories: train_step / prefill / serve(decode) per architecture.
+
+These are the functions the multi-pod dry-run lowers and compiles, and
+the same ones examples/ and launch/train.py execute on real hardware.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+from repro.models.common import ModelConfig, cross_entropy
+from repro.train import optimizer as opt
+
+PyTree = Any
+AUX_WEIGHT = 0.01     # MoE load-balance loss weight
+
+
+def make_train_step(cfg: ModelConfig, ocfg: opt.AdamWConfig, *,
+                    impl: str = "xla", remat: bool = True,
+                    unroll: bool = False, strategy=None,
+                    microbatches: int = 1):
+    """Train-step factory.  microbatches > 1 accumulates gradients over
+    batch slices with lax.scan — per-step activation memory divides by
+    the microbatch count at the cost of re-running the forward (the knob
+    for cells whose remat working set exceeds HBM)."""
+    def loss_fn(params, batch):
+        if strategy is not None:
+            # explicit ZeRO-3 gather: weights consumed TP-sharded only,
+            # so matmuls run local and grads reduce-scatter on transpose
+            params = strategy.gather_for_compute(params)
+        logits, aux = transformer.train_logits(cfg, params, batch, impl=impl,
+                                               remat=remat, unroll=unroll)
+        loss = cross_entropy(logits, batch["labels"],
+                             n_real_vocab=cfg.vocab_size)
+        return loss + AUX_WEIGHT * aux, (loss, aux)
+
+    def grads_of(params, batch):
+        return jax.grad(loss_fn, has_aux=True)(params, batch)
+
+    def train_step(params, opt_state, batch):
+        if microbatches > 1:
+            def slice_mb(i, leaf):
+                mb = leaf.shape[0] // microbatches
+                return jax.lax.dynamic_slice_in_dim(leaf, i * mb, mb, axis=0)
+
+            def body(carry, i):
+                acc, loss_a, aux_a = carry
+                mb = jax.tree.map(lambda l: slice_mb(i, l), batch)
+                g, (loss, aux) = grads_of(params, mb)
+                acc = jax.tree.map(lambda a, b: a + b, acc, g)
+                return (acc, loss_a + loss, aux_a + aux), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, loss, aux), _ = jax.lax.scan(
+                body, (zeros, jnp.zeros(()), jnp.zeros(())),
+                jnp.arange(microbatches))
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            loss = loss / microbatches
+            aux = aux / microbatches
+        else:
+            grads, (loss, aux) = grads_of(params, batch)
+        params, opt_state, gnorm = opt.adamw_update(ocfg, params, grads,
+                                                    opt_state)
+        metrics = {"loss": loss, "aux_loss": aux, "grad_norm": gnorm,
+                   "step": opt_state["step"]}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, *, impl: str = "xla",
+                      max_len: int = 0, unroll: bool = False, strategy=None):
+    def prefill_step(params, batch):
+        if strategy is not None:
+            params = strategy.gather_for_compute(params)
+        return transformer.prefill(cfg, params, batch, impl=impl,
+                                   max_len=max_len, unroll=unroll)
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, *, impl: str = "xla",
+                     unroll: bool = False, strategy=None):
+    def decode_step(params, caches, tokens, position, memory=None):
+        if strategy is not None:
+            params = strategy.gather_for_compute(params)
+        return transformer.decode_step(cfg, params, caches, tokens, position,
+                                       memory=memory, impl=impl,
+                                       unroll=unroll)
+    return decode_step
+
+
+def synthetic_batch_shapes(cfg: ModelConfig, batch: int, seq: int,
+                           *, mode: str = "train",
+                           enc_len: int = 4096) -> PyTree:
+    """ShapeDtypeStruct stand-ins for every model input (dry-run pattern:
+    weak-type-correct, shardable, no allocation)."""
+    sd = jax.ShapeDtypeStruct
+    if mode == "train":
+        text = seq - (cfg.n_img_tokens if cfg.family == "vlm" else 0)
+        b = {"tokens": sd((batch, text), jnp.int32),
+             "labels": sd((batch, text), jnp.int32)}
+    elif mode == "prefill":
+        text = seq - (cfg.n_img_tokens if cfg.family == "vlm" else 0)
+        b = {"tokens": sd((batch, text), jnp.int32)}
+    else:
+        raise ValueError(mode)
+    if cfg.family == "encdec":
+        b["enc_embeds"] = sd((batch, min(enc_len, seq), cfg.d_model),
+                             jnp.bfloat16)
+    if cfg.family == "vlm":
+        b["img_embeds"] = sd((batch, cfg.n_img_tokens, cfg.d_model),
+                             jnp.bfloat16)
+    return b

@@ -1,0 +1,4 @@
+from . import optimizer
+from .optimizer import AdamWConfig, adamw_init, adamw_update
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "optimizer"]

@@ -1,0 +1,41 @@
+"""Error-feedback int8 gradient compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.runtime import compression as comp
+
+
+def test_roundtrip_bounded_error():
+    key = jax.random.PRNGKey(0)
+    g = jax.random.normal(key, (64, 256)) * 0.01
+    q, s = comp.quantize(g)
+    back = comp.dequantize(q, s)
+    assert q.dtype == jnp.int8
+    # per-row error bounded by scale/2
+    err = jnp.abs(back - g)
+    assert float((err - s / 2).max()) < 1e-6
+
+
+def test_error_feedback_accumulates_to_truth():
+    """Sum of dequantized grads + final error == sum of true grads."""
+    key = jax.random.PRNGKey(1)
+    grads = {"w": jax.random.normal(key, (8, 32)) * 1e-3}
+    err = comp.init_error(grads)
+    total_q = jnp.zeros((8, 32))
+    total_true = jnp.zeros((8, 32))
+    for i in range(20):
+        g = {"w": jax.random.normal(jax.random.fold_in(key, i),
+                                    (8, 32)) * 1e-3}
+        payload, err = comp.compress_grads(g, err)
+        total_q = total_q + comp.decompress_grads(payload)["w"]
+        total_true = total_true + g["w"]
+    resid = total_true - (total_q + err["w"])
+    assert float(jnp.abs(resid).max()) < 1e-5
+
+
+def test_compression_ratio():
+    grads = {"a": jnp.zeros((1024, 1024), jnp.float32)}
+    payload, _ = comp.compress_grads(grads, comp.init_error(grads))
+    raw = 1024 * 1024 * 4
+    assert comp.compressed_bytes(payload) < raw / 3.5

@@ -1,0 +1,96 @@
+"""Time-slotted scheduler: oracle vs fast path, paper-model invariants."""
+import numpy as np
+import pytest
+
+from repro.core import oracle, solver, timeslot, topology, traffic
+
+
+def small_problem(name, total=8.0, T=3, seed=1):
+    t = topology.build(name)
+    cf = traffic.shuffle_traffic(t, total, n_map=4, n_reduce=3, seed=seed)
+    T = 6 if name == "pon3" else T
+    return timeslot.ScheduleProblem(t, cf, n_slots=T, rho=8.0)
+
+
+@pytest.mark.parametrize("name", ["spine-leaf", "bcube", "pon3", "pon5"])
+def test_fast_path_feasible_everywhere(name):
+    p = small_problem(name)
+    for obj in ("time", "energy"):
+        r = solver.solve_fast(p, obj, iters=3000)
+        assert r.metrics.feasible, (name, obj, r.metrics.max_violation)
+        assert r.remaining_gbits < 1e-6
+
+
+@pytest.mark.parametrize("name", ["spine-leaf", "pon3"])
+def test_oracle_objective_bounds_fast_path(name):
+    """The exact MILP is at least as good as the heuristic fast path."""
+    p = small_problem(name)
+    om = oracle.solve(p, "time", time_limit=120, mip_rel_gap=1e-7).metrics
+    fm = solver.solve_fast(p, "time", iters=4000).metrics
+    assert om.completion_s <= fm.completion_s + 1e-6
+    oe = oracle.solve(p, "energy", time_limit=120, mip_rel_gap=1e-7).metrics
+    fe = solver.solve_fast(p, "energy", iters=4000).metrics
+    assert oe.energy_j <= fe.energy_j + 1e-6
+
+
+def test_energy_time_tradeoff_spine_leaf():
+    """Paper §VI: min-E gives lower E and higher M than min-M."""
+    p = small_problem("spine-leaf")
+    om = oracle.solve(p, "time", time_limit=60, mip_rel_gap=1e-7).metrics
+    oe = oracle.solve(p, "energy", time_limit=60, mip_rel_gap=1e-7).metrics
+    assert oe.energy_j <= om.energy_j + 1e-6
+    assert om.completion_s <= oe.completion_s + 1e-6
+
+
+def test_pon3_beats_electronic_on_energy():
+    """Paper §VI-B: the AWGR PON cell is dramatically more energy
+    efficient than electronic DCNs for the same shuffle."""
+    e_pon = oracle.solve(small_problem("pon3"), "energy",
+                         time_limit=120, mip_rel_gap=1e-6).metrics.energy_j
+    e_sl = oracle.solve(small_problem("spine-leaf"), "energy",
+                        time_limit=120, mip_rel_gap=1e-6).metrics.energy_j
+    assert e_pon < 0.3 * e_sl
+
+
+def test_higher_rate_lower_energy():
+    """Paper §VI-A: rho=8 vs 2.8 Gbps lowers ON/OFF energy."""
+    t = topology.build("spine-leaf")
+    cf = traffic.shuffle_traffic(t, 20.0, n_map=4, n_reduce=3, seed=0)
+    e = {}
+    for rho in (2.8, 8.0):
+        p = timeslot.ScheduleProblem(t, cf, n_slots=6, rho=rho)
+        e[rho] = oracle.solve(p, "energy", time_limit=120,
+                              mip_rel_gap=1e-6).metrics.energy_j
+    assert e[8.0] <= e[2.8]
+
+
+def test_release_slots_respected():
+    t = topology.build("spine-leaf")
+    cf = traffic.shuffle_traffic(t, 4.0, n_map=2, n_reduce=2, seed=0)
+    p = timeslot.ScheduleProblem(t, cf, n_slots=4, rho=8.0,
+                                 release_slot=np.array([2] * cf.n_flows))
+    r = solver.solve_fast(p, "time", iters=2000)
+    assert r.metrics.feasible
+    assert r.schedule[:, :, :, :2].max() == 0.0
+    assert r.metrics.completion_s > 2.0   # cannot finish before slot 3
+
+
+def test_evaluate_flags_capacity_violation():
+    p = small_problem("spine-leaf")
+    x = np.zeros(p.shape_x)
+    f = 0
+    # push 10x the link capacity on the first admissible edge in slot 0
+    e = int(np.flatnonzero(p.flow_edge_mask[f])[0])
+    x[f, e, 0, 0] = 100.0
+    m = timeslot.evaluate(p, x)
+    assert not m.feasible
+
+
+def test_skewed_traffic_sums_to_total():
+    t = topology.build("fat-tree")
+    for seed in range(5):
+        cf = traffic.shuffle_traffic(t, 37.5, skew=True, seed=seed)
+        assert cf.n_flows == 60
+        assert cf.total_gbits == pytest.approx(37.5)
+        sizes = cf.size.reshape(10, 6)
+        assert np.allclose(sizes, sizes[:, :1])   # per-map even split

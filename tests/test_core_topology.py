@@ -1,0 +1,61 @@
+"""Topology graphs match the paper's Table II / Figs. 4-5."""
+import numpy as np
+import pytest
+
+from repro.core import topology
+
+
+@pytest.mark.parametrize("name,servers,switches,links,static_w", [
+    ("fat-tree", 16, 20, 48, 20 * 94.33 + 16 * 1.0),
+    ("spine-leaf", 16, 6, 24, 6 * 193.0 + 16 * 1.0),
+    ("bcube", 16, 8, 32, 8 * 94.33 + 16 * 14.0),
+    ("dcell", 20, 5, 30, 5 * 94.33 + 20 * 14.0),
+    ("pon5", 16, 5, 26, 217.0 + 4 * 12.0 + 16 * 14.0),
+])
+def test_counts_and_power(name, servers, switches, links, static_w):
+    t = topology.build(name)
+    assert len(t.servers) == servers
+    assert len(t.switches) == switches
+    assert t.n_edges == 2 * links            # directed
+    assert t.static_power() == pytest.approx(static_w, rel=1e-6)
+    t.validate()
+
+
+def test_dcell_tasks_on_16_of_20():
+    t = topology.build("dcell")
+    assert len(t.task_servers) == 16
+    assert len(t.servers) == 20
+
+
+def test_pon3_structure():
+    t = topology.build("pon3")
+    assert len(t.servers) == 16
+    assert t.n_wavelengths == 4
+    assert t.slot_duration == 0.25
+    assert not t.server_relay            # eq. (46)
+    assert t.one_wavelength_tx           # eq. (47)
+    assert t.static_power() == pytest.approx(217 + 4 * 12 + 16 * 2.0)
+    # every ordered (rack/OLT) pair has exactly one wavelength-routed path
+    lam = topology.TABLE_I_LAMBDA
+    for i in range(5):
+        row = [lam[i, j] for j in range(5) if j != i]
+        col = [lam[j, i] for j in range(5) if j != i]
+        assert sorted(row) == [0, 1, 2, 3]   # eq. (5): distinct per source
+        assert sorted(col) == [0, 1, 2, 3]   # eq. (4): distinct per dest
+
+
+def test_all_topologies_have_connected_task_servers():
+    for name in topology.BUILDERS:
+        t = topology.build(name)
+        # BFS over undirected reachability from first task server
+        adj = {}
+        for u, v in t.edges:
+            adj.setdefault(int(u), set()).add(int(v))
+        seen, stack = set(), [t.task_servers[0]]
+        while stack:
+            u = stack.pop()
+            if u in seen:
+                continue
+            seen.add(u)
+            stack.extend(adj.get(u, ()))
+        assert set(t.task_servers) <= seen, name

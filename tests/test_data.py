@@ -1,0 +1,31 @@
+"""Data pipeline determinism + host sharding."""
+import numpy as np
+
+from repro.data import DataConfig, synthetic_stream
+from repro.data.pipeline import _batch_at
+
+
+def test_deterministic_resume():
+    cfg = DataConfig(vocab_size=1000, batch=8, seq=32, seed=3)
+    s1 = synthetic_stream(cfg)
+    first = [next(s1) for _ in range(5)]
+    s2 = synthetic_stream(cfg, start_step=3)
+    again = next(s2)
+    np.testing.assert_array_equal(first[3]["tokens"], again["tokens"])
+
+
+def test_host_shards_disjoint_and_stable():
+    kw = dict(vocab_size=512, batch=8, seq=16, seed=0, n_hosts=2)
+    a = _batch_at(DataConfig(host_id=0, **kw), step=7)
+    b = _batch_at(DataConfig(host_id=1, **kw), step=7)
+    assert a["tokens"].shape == (4, 16)
+    assert not np.array_equal(a["tokens"], b["tokens"])
+    a2 = _batch_at(DataConfig(host_id=0, **kw), step=7)
+    np.testing.assert_array_equal(a["tokens"], a2["tokens"])
+
+
+def test_labels_are_shifted_tokens():
+    cfg = DataConfig(vocab_size=100, batch=2, seq=8, seed=1)
+    b = _batch_at(cfg, 0)
+    assert b["tokens"].shape == b["labels"].shape
+    assert (b["tokens"] < 100).all() and (b["labels"] < 100).all()

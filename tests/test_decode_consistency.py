@@ -1,0 +1,55 @@
+"""Prefill + decode must reproduce teacher-forced logits exactly
+(capacity-based MoE is tolerance-exempt: token dropping differs by
+population)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.models import transformer
+
+
+@pytest.mark.parametrize("arch", configs.all_archs())
+def test_decode_matches_teacher_forcing(arch):
+    cfg = configs.get(arch, smoke=True)
+    key = jax.random.PRNGKey(0)
+    params = transformer.init_params(cfg, key, tp=1)
+    B, S = 2, 16
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": toks}
+    memory = None
+    if cfg.family == "encdec":
+        batch["enc_embeds"] = jax.random.normal(key, (B, 8, cfg.d_model))
+    if cfg.family == "vlm":
+        batch["img_embeds"] = jax.random.normal(
+            key, (B, cfg.n_img_tokens, cfg.d_model))
+    full, _ = transformer.train_logits(cfg, params, batch, remat=False)
+    pre = dict(batch)
+    pre["tokens"] = toks[:, :-1]
+    plog, caches = transformer.prefill(cfg, params, pre, max_len=S + 4)
+    if cfg.family == "encdec":
+        memory = transformer._encode(cfg, params, batch["enc_embeds"])
+    pos = S - 1 + (cfg.n_img_tokens if cfg.family == "vlm" else 0)
+    dlog, _ = transformer.decode_step(cfg, params, caches, toks[:, -1:],
+                                      pos, memory=memory)
+    tol = 1.0 if cfg.moe else 2e-2
+    assert float(jnp.abs(plog[:, 0] - full[:, S - 2]).max()) < tol
+    assert float(jnp.abs(dlog[:, 0] - full[:, S - 1]).max()) < tol
+
+
+def test_windowed_decode_multi_step():
+    """Ring-buffer SWA cache stays consistent across many decode steps."""
+    cfg = configs.get("h2o_danube_3_4b", smoke=True)   # window=32
+    key = jax.random.PRNGKey(3)
+    params = transformer.init_params(cfg, key, tp=1)
+    B, S, G = 1, 40, 8
+    toks = jax.random.randint(key, (B, S + G), 0, cfg.vocab_size)
+    full, _ = transformer.train_logits(cfg, params, {"tokens": toks},
+                                       remat=False)
+    _, caches = transformer.prefill(cfg, params, {"tokens": toks[:, :S]},
+                                    max_len=S + G)
+    for i in range(G):
+        dlog, caches = transformer.decode_step(
+            cfg, params, caches, toks[:, S + i: S + i + 1], S + i)
+        err = float(jnp.abs(dlog[:, 0] - full[:, S + i]).max())
+        assert err < 2e-2, (i, err)

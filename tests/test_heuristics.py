@@ -1,0 +1,37 @@
+"""Baseline schedulers (FIFO / fair / SEBF) vs the optimizing paths."""
+import numpy as np
+import pytest
+
+from repro.core import heuristics, oracle, solver, timeslot, topology, traffic
+
+
+def prob(name="spine-leaf", total=16.0):
+    t = topology.build(name)
+    cf = traffic.shuffle_traffic(t, total, n_map=4, n_reduce=3, seed=2)
+    return timeslot.ScheduleProblem(t, cf, n_slots=6, rho=8.0)
+
+
+@pytest.mark.parametrize("rule", ["fifo", "fair", "sebf"])
+@pytest.mark.parametrize("name", ["spine-leaf", "bcube", "pon3"])
+def test_baselines_feasible(rule, name):
+    p = prob(name)
+    x = heuristics.schedule(p, rule)
+    m = timeslot.evaluate(p, x)
+    assert m.feasible, (rule, name, m.max_violation)
+    assert m.served.sum() == pytest.approx(p.coflow.total_gbits, rel=1e-6)
+
+
+def test_coflow_optimum_beats_fifo():
+    """The paper's premise (via Varys): co-flow-aware scheduling beats
+    FIFO on completion time."""
+    p = prob()
+    m_fifo = timeslot.evaluate(p, heuristics.schedule(p, "fifo"))
+    m_opt = oracle.solve_lexico(p, "time", time_limit=120).metrics
+    assert m_opt.completion_s < m_fifo.completion_s
+
+
+def test_sebf_at_least_as_good_as_fifo():
+    p = prob()
+    m_fifo = timeslot.evaluate(p, heuristics.schedule(p, "fifo"))
+    m_sebf = timeslot.evaluate(p, heuristics.schedule(p, "sebf"))
+    assert m_sebf.completion_s <= m_fifo.completion_s + 1e-9

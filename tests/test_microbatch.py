@@ -1,0 +1,27 @@
+"""Gradient accumulation: microbatched step == full-batch step."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.models import transformer
+from repro.runtime import steps as rsteps
+from repro.train import optimizer as ropt
+
+
+def test_microbatch_matches_full_batch():
+    cfg = configs.get("phi4_mini_3_8b", smoke=True)
+    key = jax.random.PRNGKey(0)
+    params = transformer.init_params(cfg, key, tp=1)
+    ocfg = ropt.AdamWConfig(total_steps=10)
+    opt_state = ropt.adamw_init(params)
+    batch = {"tokens": jax.random.randint(key, (4, 64), 0, cfg.vocab_size),
+             "labels": jax.random.randint(key, (4, 64), 0, cfg.vocab_size)}
+    s1 = jax.jit(rsteps.make_train_step(cfg, ocfg, microbatches=1))
+    s2 = jax.jit(rsteps.make_train_step(cfg, ocfg, microbatches=2))
+    p1, _, m1 = s1(params, opt_state, batch)
+    p2, _, m2 = s2(params, opt_state, batch)
+    assert abs(float(m1["loss"]) - float(m2["loss"])) < 1e-5
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=2e-5, rtol=2e-4)

@@ -1,0 +1,54 @@
+"""End-to-end behaviour: the full training/serving drivers."""
+import json
+import pathlib
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+
+def test_train_driver_end_to_end(tmp_path):
+    from repro.launch import train as tmain
+    losses = tmain.main([
+        "--arch", "granite-moe-1b-a400m", "--smoke", "--steps", "12",
+        "--batch", "4", "--seq", "64", "--ckpt-dir", str(tmp_path),
+        "--ckpt-every", "6", "--log-every", "6"])
+    assert len(losses) == 12
+    assert all(np.isfinite(losses))
+    # checkpoint written and resumable
+    losses2 = tmain.main([
+        "--arch", "granite-moe-1b-a400m", "--smoke", "--steps", "14",
+        "--batch", "4", "--seq", "64", "--ckpt-dir", str(tmp_path),
+        "--resume", "--log-every", "6"])
+    assert len(losses2) == 2          # resumed at step 12
+
+
+def test_serve_driver_end_to_end():
+    from repro.launch import serve as smain
+    gen = smain.main(["--arch", "recurrentgemma-2b", "--smoke",
+                      "--batch", "2", "--prompt-len", "24", "--gen", "6"])
+    assert gen.shape == (2, 6)
+    assert (gen >= 0).all()
+
+
+def test_dryrun_artifacts_complete():
+    """The multi-pod dry-run results: every (arch x shape x mesh) cell is
+    either OK or a documented long_500k skip."""
+    d = REPO / "results" / "dryrun"
+    files = [f for f in d.glob("*.json") if "unrolled" not in f.name]
+    if len(files) < 80:
+        pytest.skip("dry-run sweep artifacts not present")
+    n_ok = n_skip = 0
+    for f in files:
+        r = json.loads(f.read_text())
+        if r["ok"]:
+            n_ok += 1
+            assert r["flops_per_device"] > 0, f.name
+        else:
+            assert r["error"].startswith("skip"), (f.name, r["error"])
+            assert r["shape"] == "long_500k"
+            n_skip += 1
+    assert n_ok == 66 and n_skip == 14, (n_ok, n_skip)
