@@ -27,3 +27,5 @@ for name in ("spine-leaf", "pon3"):
               f"(feasible={fm.feasible})")
 print("\nPON3 vs electronic: note the ~an-order-of-magnitude energy gap "
       "at min-energy — the paper's §VI-B headline.")
+print("Next: examples/pattern_sweep.py (batched multi-seed API) or the "
+      "full grid via `python -m repro.sweep` (see README).")

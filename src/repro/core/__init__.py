@@ -10,13 +10,15 @@
 """
 from . import fabric, oracle, solver, timeslot, topology, traffic, wavelength
 from .fabric import Bucket, FabricSpec, SlotPlan, plan_collectives, v5e_fabric
-from .timeslot import Metrics, ScheduleProblem, evaluate
+from .timeslot import Metrics, ScheduleProblem, evaluate, suggest_n_slots
 from .topology import Topology, build as build_topology
-from .traffic import CoflowSet, shuffle_traffic
+from .traffic import (CoflowSet, TrafficPattern, generate, generate_batch,
+                      pattern, shuffle_traffic)
 
 __all__ = [
     "Bucket", "CoflowSet", "FabricSpec", "Metrics", "ScheduleProblem",
-    "SlotPlan", "Topology", "build_topology", "evaluate", "fabric", "oracle",
-    "plan_collectives", "shuffle_traffic", "solver", "timeslot", "topology",
-    "traffic", "v5e_fabric", "wavelength",
+    "SlotPlan", "Topology", "TrafficPattern", "build_topology", "evaluate",
+    "fabric", "generate", "generate_batch", "oracle", "pattern",
+    "plan_collectives", "shuffle_traffic", "solver", "suggest_n_slots",
+    "timeslot", "topology", "traffic", "v5e_fabric", "wavelength",
 ]

@@ -38,6 +38,10 @@ class ScheduleProblem:
     # before slot release_slot[f] (0-based).  None = all ready at t=0, which
     # is the paper's assumption for the shuffle phase.
     release_slot: np.ndarray | None = None
+    # route pruning for sweep-scale solves: keep only edges on paths at most
+    # `path_slack` hops longer than each flow's shortest route.  None keeps
+    # the paper's full route space (any edge not touching src/dst wrongly).
+    path_slack: int | None = None
 
     def __post_init__(self):
         t = self.topo
@@ -66,6 +70,13 @@ class ScheduleProblem:
             # eq. (46): servers never forward other servers' traffic (PON3)
             mask &= ~(u_is_server[None, :] & (self.e_src[None, :] != src[:, None]))
             mask &= ~(v_is_server[None, :] & (self.e_dst[None, :] != dst[:, None]))
+        if self.path_slack is not None:
+            dist = _hop_distances(t)
+            # edge (u, v) stays admissible for flow f iff it lies on some
+            # src->dst walk within path_slack hops of the shortest one
+            through = (dist[src][:, self.e_src] + 1
+                       + dist[:, dst].T[:, self.e_dst])
+            mask &= through <= (dist[src, dst] + self.path_slack)[:, None]
         self.flow_edge_mask = mask
         # wavelength availability per edge
         self.edge_w_ok = t.cap > 0.0            # (E, W)
@@ -96,6 +107,58 @@ class Metrics:
     def objective(self, kind: str) -> float:
         base = self.energy_j if kind == "energy" else self.completion_s
         return base + self.fairness_term
+
+
+def _hop_distances(topo: Topology) -> np.ndarray:
+    """(V, V) directed hop-count distance matrix (BFS per vertex),
+    memoized on the topology instance — sweeps build hundreds of
+    ScheduleProblems over the same handful of graphs."""
+    cached = getattr(topo, "_hop_dist_cache", None)
+    if cached is not None:
+        return cached
+    V = topo.n_vertices
+    nbrs: list[list[int]] = [[] for _ in range(V)]
+    for u, v in topo.edges:
+        nbrs[int(u)].append(int(v))
+    dist = np.full((V, V), np.inf)
+    for s in range(V):
+        dist[s, s] = 0.0
+        frontier = [s]
+        d = 0
+        while frontier:
+            d += 1
+            nxt = []
+            for u in frontier:
+                for v in nbrs[u]:
+                    if dist[s, v] > d:
+                        dist[s, v] = d
+                        nxt.append(v)
+            frontier = nxt
+    topo._hop_dist_cache = dist
+    return dist
+
+
+def suggest_n_slots(topo: Topology, coflow: CoflowSet, *, rho: float = 8.0,
+                    slack: float = 2.0, extra: int = 2) -> int:
+    """Horizon heuristic for sweep-scale problems: a continuous-time lower
+    bound on the shuffle makespan (max over vertices of offered Gbits
+    divided by the tighter of the egress-rate cap rho and the incident
+    per-wavelength link capacity), stretched by `slack` to give the greedy
+    slot packer headroom, plus `extra` slots."""
+    out_g = np.zeros(topo.n_vertices)
+    in_g = np.zeros(topo.n_vertices)
+    np.add.at(out_g, coflow.src, coflow.size)
+    np.add.at(in_g, coflow.dst, coflow.size)
+    cap_out = np.zeros(topo.n_vertices)
+    cap_in = np.zeros(topo.n_vertices)
+    per_edge = topo.cap.sum(axis=1)
+    np.add.at(cap_out, topo.edges[:, 0], per_edge)
+    np.add.at(cap_in, topo.edges[:, 1], per_edge)
+    rate_out = np.minimum(np.maximum(cap_out, 1e-9), rho)
+    rate_in = np.maximum(cap_in, 1e-9)
+    t_lb = max(float((out_g / rate_out).max(initial=0.0)),
+               float((in_g / rate_in).max(initial=0.0)))
+    return max(int(np.ceil(slack * t_lb / topo.slot_duration)) + extra, 2)
 
 
 def _delta_from_x(p: ScheduleProblem, x: np.ndarray) -> np.ndarray:

@@ -1,14 +1,28 @@
-"""MapReduce shuffle-phase co-flow traffic model (paper §IV-B).
+"""MapReduce shuffle-phase co-flow traffic models (paper §IV-B).
 
 A sort workload (identity mappers, GraySort-style) shuffles the full
-intermediate dataset from the map servers to the reduce servers.  Ten map
-servers and six reduce servers are drawn from the topology's task servers;
-each (mapper, reducer) pair is one flow => 60 flows.  Flow sizes:
+intermediate dataset from the map servers to the reduce servers; each
+(mapper, reducer) pair is one flow.  The paper's headline sweeps vary
+three things, all captured by :class:`TrafficPattern`:
 
-  * uniform (Indy GraySort): every map output is total/10, split evenly
-    over the 6 reducers.
-  * skewed (Daytona GraySort): map output sizes ~ U(0, total), rescaled so
-    they sum to `total_gbits`, each split evenly over the reducers.
+  * task placement — where the map/reduce tasks land on the topology:
+      - "spread":  seeded-random over all task servers (the paper's
+                   default random allocation),
+      - "packed":  tasks packed rack-by-rack / cell-by-cell (grouped
+                   placement, maximizing rack locality of each role),
+      - "local":   mappers and reducers co-located inside the same
+                   racks/PON cells (maximizing intra-cell shuffle
+                   traffic — the regime where the AWGR/backplane
+                   fabrics shine);
+  * map-output skew — flow sizes:
+      - "uniform": every map output is total/n_map (Indy GraySort),
+      - "daytona": map output sizes ~ U(0, total), rescaled so they
+                   sum to `total_gbits` (Daytona GraySort, Fig. 6);
+  * scale — (n_map, n_reduce, total_gbits).
+
+`generate_batch` materializes one CoflowSet per seed with identical
+flow count and topology, which is exactly the shape the batched PDHG
+solve (core.solver.solve_fast_batch) stacks into fused dispatches.
 """
 from __future__ import annotations
 
@@ -17,6 +31,9 @@ import dataclasses
 import numpy as np
 
 from .topology import Topology
+
+PLACEMENTS = ("spread", "packed", "local")
+SKEWS = ("uniform", "daytona")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -37,35 +54,138 @@ class CoflowSet:
         return float(self.size.sum())
 
 
+@dataclasses.dataclass(frozen=True)
+class TrafficPattern:
+    """One point of the paper's traffic grid (placement x skew x scale)."""
+
+    name: str = "uniform"
+    placement: str = "spread"
+    skew: str = "uniform"
+    n_map: int = 10
+    n_reduce: int = 6
+    total_gbits: float = 30.0
+
+    def __post_init__(self):
+        if self.placement not in PLACEMENTS:
+            raise ValueError(f"placement {self.placement!r} not in {PLACEMENTS}")
+        if self.skew not in SKEWS:
+            raise ValueError(f"skew {self.skew!r} not in {SKEWS}")
+
+
+# Named presets used by the sweep CLI (`--patterns uniform,skew,packed,local`).
+PATTERNS: dict[str, TrafficPattern] = {
+    "uniform": TrafficPattern("uniform", "spread", "uniform"),
+    "skew": TrafficPattern("skew", "spread", "daytona"),
+    "packed": TrafficPattern("packed", "packed", "uniform"),
+    "local": TrafficPattern("local", "local", "uniform"),
+}
+
+
+def pattern(name: str, **overrides) -> TrafficPattern:
+    """Look up a preset by name, optionally overriding scale fields."""
+    if name not in PATTERNS:
+        raise KeyError(f"unknown pattern {name!r}; have {sorted(PATTERNS)}")
+    return dataclasses.replace(PATTERNS[name], **overrides)
+
+
+def server_groups(topo: Topology) -> dict[str, list[int]]:
+    """Task servers grouped by rack/cell/pod, parsed from device names.
+
+    Every builder in core.topology names servers "srv{group}.{index}", so
+    the prefix before the dot identifies the rack (PON3/PON5), cell
+    (DCell), pod (fat-tree), leaf (spine-leaf) or level-0 group (BCube).
+    """
+    groups: dict[str, list[int]] = {}
+    for i in topo.task_servers:
+        name = topo.devices[i].name
+        key = name.split(".")[0] if "." in name else name
+        groups.setdefault(key, []).append(i)
+    return groups
+
+
+def _place(topo: Topology, pat: TrafficPattern,
+           rng: np.random.Generator) -> tuple[np.ndarray, np.ndarray]:
+    """Pick (mappers, reducers) vertex ids under the pattern's placement."""
+    servers = np.asarray(topo.task_servers)
+    need = pat.n_map + pat.n_reduce
+    if need > len(servers):
+        raise ValueError(f"{topo.name}: need {need} task servers, "
+                         f"have {len(servers)}")
+    if pat.placement == "spread":
+        perm = rng.permutation(len(servers))
+        chosen = servers[perm[:need]]
+        return chosen[:pat.n_map], chosen[pat.n_map:need]
+
+    groups = [np.asarray(g) for g in server_groups(topo).values()]
+    order = rng.permutation(len(groups))
+    if pat.placement == "packed":
+        # fill whole racks in random order: mappers first, reducers continue
+        seq = np.concatenate([groups[i] for i in order])
+        return seq[:pat.n_map], seq[pat.n_map:need]
+
+    # "local": walk racks in random order, splitting each rack's servers
+    # between the two roles proportionally, so mappers and their reducers
+    # share racks and the shuffle stays cell-local wherever possible.
+    mappers: list[int] = []
+    reducers: list[int] = []
+    rem_m, rem_r = pat.n_map, pat.n_reduce
+    for gi in order:
+        g = groups[gi].copy()
+        rng.shuffle(g)
+        for s in g:
+            if rem_m + rem_r == 0:
+                break
+            if rem_r == 0 or (rem_m > 0 and
+                              rem_m * pat.n_reduce >= rem_r * pat.n_map):
+                mappers.append(int(s))
+                rem_m -= 1
+            else:
+                reducers.append(int(s))
+                rem_r -= 1
+    return np.asarray(mappers), np.asarray(reducers)
+
+
+def _map_outputs(pat: TrafficPattern, rng: np.random.Generator) -> np.ndarray:
+    if pat.skew == "daytona":
+        raw = rng.uniform(0.0, pat.total_gbits, size=pat.n_map)
+        return raw * (pat.total_gbits / raw.sum())
+    return np.full(pat.n_map, pat.total_gbits / pat.n_map)
+
+
+def generate(topo: Topology, pat: TrafficPattern, seed: int = 0) -> CoflowSet:
+    """Build one shuffle co-flow set for `topo` under `pat`."""
+    rng = np.random.default_rng(seed)
+    mappers, reducers = _place(topo, pat, rng)
+    map_out = _map_outputs(pat, rng)
+    src = np.repeat(mappers, pat.n_reduce)
+    dst = np.tile(reducers, pat.n_map)
+    size = np.repeat(map_out / pat.n_reduce, pat.n_reduce)
+    return CoflowSet(src.astype(np.int64), dst.astype(np.int64),
+                     size.astype(np.float64), topo.n_vertices)
+
+
+def generate_batch(topo: Topology, pat: TrafficPattern,
+                   seeds) -> list[CoflowSet]:
+    """One CoflowSet per seed; all share F = n_map*n_reduce flows and the
+    same topology, so the resulting ScheduleProblems stack into a batched
+    solve (core.solver.solve_fast_batch)."""
+    return [generate(topo, pat, int(s)) for s in np.asarray(seeds)]
+
+
 def shuffle_traffic(topo: Topology, total_gbits: float, *,
                     n_map: int = 10, n_reduce: int = 6,
                     skew: bool = False, seed: int = 0) -> CoflowSet:
-    """Build the shuffle co-flow set for `topo` (placement is seeded-random,
-    matching the paper's random task allocation)."""
-    rng = np.random.default_rng(seed)
-    servers = np.asarray(topo.task_servers)
-    if n_map + n_reduce > len(servers):
-        raise ValueError(f"{topo.name}: need {n_map + n_reduce} task servers, "
-                         f"have {len(servers)}")
-    perm = rng.permutation(len(servers))
-    mappers = servers[perm[:n_map]]
-    reducers = servers[perm[n_map:n_map + n_reduce]]
+    """Legacy single-instance entry point (random-spread placement).
 
-    if skew:
-        # map output sizes ~ U(0, total), rescaled to sum to total (Fig. 6)
-        raw = rng.uniform(0.0, total_gbits, size=n_map)
-        map_out = raw * (total_gbits / raw.sum())
-    else:
-        map_out = np.full(n_map, total_gbits / n_map)
-
-    src, dst, size = [], [], []
-    for mi, m in enumerate(mappers):
-        for r in reducers:
-            src.append(m)
-            dst.append(r)
-            size.append(map_out[mi] / n_reduce)
-    return CoflowSet(np.asarray(src), np.asarray(dst),
-                     np.asarray(size, dtype=np.float64), topo.n_vertices)
+    Kept RNG-compatible with the original seed: placement permutation is
+    drawn first, skewed sizes second, so results for a given seed are
+    unchanged."""
+    pat = TrafficPattern(name="skew" if skew else "uniform",
+                         placement="spread",
+                         skew="daytona" if skew else "uniform",
+                         n_map=n_map, n_reduce=n_reduce,
+                         total_gbits=total_gbits)
+    return generate(topo, pat, seed)
 
 
 def custom_coflow(src, dst, size, n_vertices: int) -> CoflowSet:

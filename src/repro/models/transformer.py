@@ -372,6 +372,10 @@ def prefill(cfg: ModelConfig, params, batch, *, impl="xla", max_len: int = 0,
     if cfg.family == "vlm":
         img = batch["img_embeds"].astype(x.dtype) @ params["img_proj"].astype(x.dtype)
         x = jnp.concatenate([shard(img, "batch", "seq", "embed"), x], axis=1)
+    # NOTE: max_len counts TOTAL positions — for VLMs that includes the
+    # n_img_tokens prepended above (launch/serve.py already does); a cache
+    # sized in text positions only would make the first decode write land
+    # on (and overwrite) the last prefill slot
     S = x.shape[1]
     positions = jnp.arange(S)[None, :]
     x, caches, _ = _run_stack(cfg, params, x, positions, mode="prefill",

@@ -21,6 +21,11 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.fabric import SlotPlan
 
+try:                                    # jax >= 0.6 top-level export
+    _shard_map = jax.shard_map
+except AttributeError:                  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
 PyTree = Any
 
 
@@ -108,8 +113,8 @@ def make_scheduled_grad_sync(mesh: Mesh, plan: SlotPlan,
             return tuple(r / n_dp for r in reduced)
 
         specs = tuple(P(*([None] * l.ndim)) for l in leaves)
-        fn = jax.shard_map(inner, mesh=mesh, in_specs=specs,
-                           out_specs=specs)
+        fn = _shard_map(inner, mesh=mesh, in_specs=specs,
+                        out_specs=specs)
         return jax.tree.unflatten(tdef, list(fn(*leaves)))
 
     return sync

@@ -26,7 +26,10 @@ def test_decode_matches_teacher_forcing(arch):
     full, _ = transformer.train_logits(cfg, params, batch, remat=False)
     pre = dict(batch)
     pre["tokens"] = toks[:, :-1]
-    plog, caches = transformer.prefill(cfg, params, pre, max_len=S + 4)
+    # max_len counts total positions, image tokens included (see prefill)
+    n_extra = cfg.n_img_tokens if cfg.family == "vlm" else 0
+    plog, caches = transformer.prefill(cfg, params, pre,
+                                       max_len=S + 4 + n_extra)
     if cfg.family == "encdec":
         memory = transformer._encode(cfg, params, batch["enc_embeds"])
     pos = S - 1 + (cfg.n_img_tokens if cfg.family == "vlm" else 0)

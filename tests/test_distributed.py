@@ -113,7 +113,7 @@ def test_fsdp_strategy_shards_largest_dim():
         strat = Strategy(mesh, "fsdp", multi_pod=False)
         shapes = transformer.init_params(cfg, shapes_only=True, tp=1)
         specs = strat.specs_for(shapes)
-        flat = jax.tree.leaves_with_path(specs)
+        flat = jax.tree_util.tree_leaves_with_path(specs)
         n_sharded = sum(1 for _, s in flat if any(a is not None for a in s))
         assert n_sharded > len(flat) // 2, n_sharded
         print("FSDP_OK", n_sharded, len(flat))

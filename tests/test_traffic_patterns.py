@@ -1,0 +1,110 @@
+"""Traffic-pattern family: placement validity, skew invariants, batching."""
+import numpy as np
+import pytest
+
+from repro.core import timeslot, topology, traffic
+
+ALL_TOPOS = list(topology.BUILDERS)
+
+
+def small_pattern(name, **kw):
+    kw.setdefault("n_map", 4)
+    kw.setdefault("n_reduce", 3)
+    kw.setdefault("total_gbits", 8.0)
+    return traffic.pattern(name, **kw)
+
+
+@pytest.mark.parametrize("topo_name", ALL_TOPOS)
+@pytest.mark.parametrize("pat_name", sorted(traffic.PATTERNS))
+def test_placement_valid_servers(topo_name, pat_name):
+    topo = topology.build(topo_name)
+    for seed in range(3):
+        cf = traffic.generate(topo, small_pattern(pat_name), seed)
+        endpoints = np.concatenate([cf.src, cf.dst])
+        assert set(endpoints.tolist()) <= set(topo.task_servers)
+        # mapper and reducer sets are disjoint
+        assert not (set(cf.src.tolist()) & set(cf.dst.tolist()))
+        assert cf.n_flows == 4 * 3
+        assert cf.total_gbits == pytest.approx(8.0)
+
+
+@pytest.mark.parametrize("topo_name", ALL_TOPOS)
+def test_skewed_sizes_sum_to_total(topo_name):
+    topo = topology.build(topo_name)
+    for seed in range(5):
+        cf = traffic.generate(topo, small_pattern("skew"), seed)
+        assert cf.total_gbits == pytest.approx(8.0)
+        sizes = cf.size.reshape(4, 3)
+        # per-map even split over reducers, but maps differ (skew)
+        assert np.allclose(sizes, sizes[:, :1])
+        assert sizes[:, 0].std() > 0
+
+
+def test_packed_placement_uses_fewest_groups():
+    topo = topology.build("pon3")   # 4 racks x 4 servers
+    groups = traffic.server_groups(topo)
+    assert len(groups) == 4 and all(len(g) == 4 for g in groups.values())
+    cf = traffic.generate(topo, small_pattern("packed"), seed=0)
+    used = set(np.concatenate([cf.src, cf.dst]).tolist())
+    # 7 tasks fit in ceil(7/4)=2 racks when packed
+    touched = [k for k, g in groups.items() if used & set(g)]
+    assert len(touched) == 2
+
+
+def test_local_placement_colocates_roles():
+    topo = topology.build("pon3")
+    groups = traffic.server_groups(topo)
+    for seed in range(4):
+        cf = traffic.generate(topo, small_pattern("local"), seed)
+        mappers, reducers = set(cf.src.tolist()), set(cf.dst.tolist())
+        # every rack that hosts a task hosts both roles (where counts allow)
+        both = sum(1 for g in groups.values()
+                   if mappers & set(g) and reducers & set(g))
+        touched = sum(1 for g in groups.values()
+                      if (mappers | reducers) & set(g))
+        assert both >= touched - 1   # at most the last partial rack is single-role
+
+
+def test_spread_matches_legacy_shuffle_traffic():
+    topo = topology.build("spine-leaf")
+    for seed, skew in [(0, False), (1, False), (2, True)]:
+        old = traffic.shuffle_traffic(topo, 8.0, n_map=4, n_reduce=3,
+                                      skew=skew, seed=seed)
+        pat = traffic.TrafficPattern(
+            "x", "spread", "daytona" if skew else "uniform", 4, 3, 8.0)
+        new = traffic.generate(topo, pat, seed)
+        assert (old.src == new.src).all() and (old.dst == new.dst).all()
+        np.testing.assert_allclose(old.size, new.size)
+
+
+def test_generate_batch_shapes_and_determinism():
+    topo = topology.build("bcube")
+    pat = small_pattern("uniform")
+    batch = traffic.generate_batch(topo, pat, range(6))
+    assert len(batch) == 6
+    assert all(cf.n_flows == batch[0].n_flows for cf in batch)
+    again = traffic.generate_batch(topo, pat, range(6))
+    for a, b in zip(batch, again):
+        assert (a.src == b.src).all() and np.allclose(a.size, b.size)
+    # different seeds give different placements
+    assert any((a.src != b.src).any()
+               for a, b in zip(batch[:-1], batch[1:]))
+
+
+def test_pattern_validation():
+    with pytest.raises(ValueError):
+        traffic.TrafficPattern(placement="nope")
+    with pytest.raises(KeyError):
+        traffic.pattern("nope")
+    with pytest.raises(ValueError):
+        traffic.generate(topology.build("spine-leaf"),
+                         traffic.pattern("uniform", n_map=20, n_reduce=20))
+
+
+def test_suggest_n_slots_scales_with_volume():
+    topo = topology.build("spine-leaf")
+    small = traffic.generate(topo, small_pattern("uniform"), 0)
+    big = traffic.generate(topo, small_pattern("uniform", total_gbits=80.0), 0)
+    t_small = timeslot.suggest_n_slots(topo, small)
+    t_big = timeslot.suggest_n_slots(topo, big)
+    assert t_big > t_small >= 2
