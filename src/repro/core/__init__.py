@@ -4,21 +4,27 @@
   traffic     - MapReduce shuffle co-flow model (§IV-B)
   timeslot    - the time-slotted problem + exact eq.(19)-(45) accounting
   oracle      - exact MILP (HiGHS), the paper-faithful reference (§V)
-  solver      - JAX PDHG routing LP + slot packing (production fast path)
+  solver      - JAX PDHG routing LP + slot packing (production fast path,
+                batched over instances, warm-started incremental re-solves)
+  failures    - degraded-topology engine (link cuts, device outages,
+                capacity degradation) feeding the incremental re-solves
   wavelength  - AWGR cell wiring + wavelength assignment MILP (§III)
   fabric      - TPU ICI adaptation: collective slot plans for training
 """
-from . import fabric, oracle, solver, timeslot, topology, traffic, wavelength
+from . import (fabric, failures, oracle, solver, timeslot, topology, traffic,
+               wavelength)
 from .fabric import Bucket, FabricSpec, SlotPlan, plan_collectives, v5e_fabric
+from .failures import FailureScenario
 from .timeslot import Metrics, ScheduleProblem, evaluate, suggest_n_slots
 from .topology import Topology, build as build_topology
 from .traffic import (CoflowSet, TrafficPattern, generate, generate_batch,
                       pattern, shuffle_traffic)
 
 __all__ = [
-    "Bucket", "CoflowSet", "FabricSpec", "Metrics", "ScheduleProblem",
-    "SlotPlan", "Topology", "TrafficPattern", "build_topology", "evaluate",
-    "fabric", "generate", "generate_batch", "oracle", "pattern",
-    "plan_collectives", "shuffle_traffic", "solver", "suggest_n_slots",
-    "timeslot", "topology", "traffic", "v5e_fabric", "wavelength",
+    "Bucket", "CoflowSet", "FabricSpec", "FailureScenario", "Metrics",
+    "ScheduleProblem", "SlotPlan", "Topology", "TrafficPattern",
+    "build_topology", "evaluate", "fabric", "failures", "generate",
+    "generate_batch", "oracle", "pattern", "plan_collectives",
+    "shuffle_traffic", "solver", "suggest_n_slots", "timeslot", "topology",
+    "traffic", "v5e_fabric", "wavelength",
 ]

@@ -1,4 +1,4 @@
-"""JAX fast-path solver: PDHG routing LP + slot packing.
+"""JAX fast-path solver: PDHG routing LP + slot packing + re-solves.
 
 The exact oracle (core.oracle) is branch-and-cut and cannot run inside a
 training loop.  The production path decomposes the paper's time-expanded
@@ -6,8 +6,11 @@ MILP into:
 
   1. a *routing LP* over (flow, edge, wavelength) volumes for the whole
      horizon — solved with diagonally-preconditioned PDHG
-     (Chambolle-Pock) written entirely in JAX (jittable, vmappable over
-     traffic instances, differentiable through the fixed-point if needed);
+     (Chambolle-Pock) written entirely in JAX.  Many instances solve in
+     one dispatch: block-diagonal stacking with a fused in-graph adaptive
+     convergence loop (solve_lp_batch / solve_fast_batch), plus a literal
+     vmap variant (pad_and_stack + _pdhg_run_batch) for accelerators with
+     fast batched scatter;
   2. a *temporal packing* pass that quantizes the fractional routing into
      the paper's discrete slots (greedy earliest-slot water-filling, with
      the PON3 one-wavelength-per-server-per-slot rule honoured);
@@ -19,6 +22,17 @@ capacities scaled by theta (the continuous-time lower bound on M); for
 energy it minimizes the true linear energy terms (NIC offload J/Gbit)
 plus a path-length regularizer, leaving the ON/OFF concentration to the
 packing stage.
+
+Incremental re-solves (core.failures): because a degraded topology keeps
+the healthy instance's device/edge indexing, a healthy solve's PDHG
+state projects onto the degraded LP — surviving routing paths keep their
+volume, duals map row-by-row — and `resolve_incremental` /
+`solve_fast_ensemble(warm=...)` restart PDHG from that state instead of
+from zero.
+
+Units follow the paper throughout: flow sizes and shipped volumes in
+Gbits, link/egress/ingress rates in Gbps, slot duration and completion
+time in seconds, energy in Joules.
 """
 from __future__ import annotations
 
@@ -72,6 +86,9 @@ class PDHGResult:
     primal_residual: float
     duality_gap_rel: float
     iterations: int
+    # final dual iterate (rows ordered [equalities; inequalities]) — kept so
+    # incremental re-solves can warm-start both sides of the saddle point
+    y: np.ndarray | None = None
 
 
 def _pdhg_ops(c, row, col, val, b, h, m, n, m_eq):
@@ -212,11 +229,15 @@ def _pdhg_run_batch(c, row, col, val, b, h, xmax, x0, y0, m, n, m_eq, iters):
 
 
 def solve_lp(lp: StructuredLP, iters: int = 4000, *,
-             tol: float | None = None, max_restarts: int = 3) -> PDHGResult:
+             tol: float | None = None, max_restarts: int = 3,
+             x0: np.ndarray | None = None,
+             y0: np.ndarray | None = None) -> PDHGResult:
     """Solve with PDHG; objective is max-normalized (the schedule is re-scored
     exactly afterwards, so only the argmin matters).  If the primal residual
     exceeds `tol`, continue the trajectory with doubled iterations (warm
-    restart — prior progress is never discarded)."""
+    restart — prior progress is never discarded).  `x0`/`y0` seed the
+    primal/dual iterates (e.g. a projected healthy solution for a degraded
+    re-solve, see project_warm_start); default is a cold start from zero."""
     xmax = np.where(np.isfinite(lp.xmax), lp.xmax, 1e12)
     cscale = max(float(np.abs(lp.c).max(initial=0.0)), 1e-12)
     if tol is None:
@@ -224,7 +245,8 @@ def solve_lp(lp: StructuredLP, iters: int = 4000, *,
     args = (jnp.asarray(lp.c / cscale), jnp.asarray(lp.row),
             jnp.asarray(lp.col), jnp.asarray(lp.val), jnp.asarray(lp.b),
             jnp.asarray(lp.h), jnp.asarray(xmax))
-    x, y = jnp.zeros(lp.n), jnp.zeros(lp.m)
+    x = jnp.zeros(lp.n) if x0 is None else jnp.asarray(x0)
+    y = jnp.zeros(lp.m) if y0 is None else jnp.asarray(y0)
     total_iters = 0
     for attempt in range(max_restarts + 1):
         x, y, primal, gap = _pdhg_resume(*args, x, y, lp.m, lp.n, lp.m_eq,
@@ -233,7 +255,8 @@ def solve_lp(lp: StructuredLP, iters: int = 4000, *,
         if float(primal) <= tol:
             break
         iters *= 2
-    return PDHGResult(np.asarray(x), float(primal), float(gap), total_iters)
+    return PDHGResult(np.asarray(x), float(primal), float(gap), total_iters,
+                      y=np.asarray(y))
 
 
 # ---------------------------------------------------------------------------
@@ -247,6 +270,13 @@ class RoutingIndex:
     kw: np.ndarray   # (K,) wavelength
     n_inj: int       # F*W injection variables
     n_theta: int     # 1 for min-time, else 0
+    # row identities, used to map dual iterates between structurally related
+    # LPs (healthy -> degraded instance; see project_warm_start).  eq_keys[i]
+    # names equality row i, ub_keys[j] names inequality row m_eq + j:
+    #   ("c", f, u, w|-1) conservation   ("d", f) demand
+    #   ("ew", e, w) link cap            ("srv", u) egress   ("sw", v) ingress
+    eq_keys: list | None = None
+    ub_keys: list | None = None
 
 
 def _admissible(p: ScheduleProblem):
@@ -284,6 +314,7 @@ def build_routing_lp(p: ScheduleProblem, objective: str) -> tuple[StructuredLP, 
 
     rows, cols, vals = [], [], []
     b_rows: list[float] = []
+    eq_keys: list[tuple] = []
 
     # --- equality rows ----------------------------------------------------
     # conservation rows: passive vertices per-w -> id (f, u, w); electronic
@@ -296,6 +327,7 @@ def build_routing_lp(p: ScheduleProblem, objective: str) -> tuple[StructuredLP, 
         if key not in row_of:
             row_of[key] = len(b_rows)
             b_rows.append(0.0)
+            eq_keys.append(key)
         return row_of[key]
 
     for k in range(K):
@@ -320,6 +352,7 @@ def build_routing_lp(p: ScheduleProblem, objective: str) -> tuple[StructuredLP, 
     for f in range(F):
         r = len(b_rows)
         b_rows.append(float(p.coflow.size[f]))
+        eq_keys.append(("d", f))
         for w in range(W):
             rows.append(r); cols.append(K + f * W + w); vals.append(1.0)
 
@@ -327,8 +360,9 @@ def build_routing_lp(p: ScheduleProblem, objective: str) -> tuple[StructuredLP, 
 
     # --- inequality rows ----------------------------------------------------
     h_rows: list[float] = []
+    ub_keys: list[tuple] = []
 
-    def ub_row(limit_times_theta: float | None, limit: float | None):
+    def ub_row(limit_times_theta: float | None, limit: float | None, key):
         """Create an inequality row; couple to theta when minimizing time."""
         r = m_eq + len(h_rows)
         if n_theta and limit_times_theta is not None:
@@ -336,6 +370,7 @@ def build_routing_lp(p: ScheduleProblem, objective: str) -> tuple[StructuredLP, 
             rows.append(r); cols.append(i_theta); vals.append(-limit_times_theta)
         else:
             h_rows.append(limit if limit is not None else np.inf)
+        ub_keys.append(key)
         return r
 
     # shared capacity per (e, w)
@@ -344,7 +379,7 @@ def build_routing_lp(p: ScheduleProblem, objective: str) -> tuple[StructuredLP, 
         e, w = int(ke[k]), int(kw[k])
         if (e, w) not in ew_ids:
             cap = float(p.topo.cap[e, w])
-            ew_ids[(e, w)] = ub_row(cap, cap * horizon)
+            ew_ids[(e, w)] = ub_row(cap, cap * horizon, ("ew", e, w))
         rows.append(ew_ids[(e, w)]); cols.append(k); vals.append(1.0)
 
     # server egress rate
@@ -354,7 +389,7 @@ def build_routing_lp(p: ScheduleProblem, objective: str) -> tuple[StructuredLP, 
             u = int(e_src[int(ke[k])])
             if p.is_server[u]:
                 if u not in srv_rows:
-                    srv_rows[u] = ub_row(p.rho, p.rho * horizon)
+                    srv_rows[u] = ub_row(p.rho, p.rho * horizon, ("srv", u))
                 rows.append(srv_rows[u]); cols.append(k); vals.append(1.0)
 
     # switch ingress rate
@@ -363,7 +398,8 @@ def build_routing_lp(p: ScheduleProblem, objective: str) -> tuple[StructuredLP, 
         v = int(e_dst[int(ke[k])])
         if p.is_switch[v] and np.isfinite(p.sigma[v]):
             if v not in sw_rows:
-                sw_rows[v] = ub_row(float(p.sigma[v]), float(p.sigma[v]) * horizon)
+                sw_rows[v] = ub_row(float(p.sigma[v]),
+                                    float(p.sigma[v]) * horizon, ("sw", v))
             rows.append(sw_rows[v]); cols.append(k); vals.append(1.0)
 
     # --- objective ------------------------------------------------------------
@@ -400,7 +436,8 @@ def build_routing_lp(p: ScheduleProblem, objective: str) -> tuple[StructuredLP, 
         c=c, row=np.asarray(rows, np.int64), col=np.asarray(cols, np.int64),
         val=np.asarray(vals, np.float64), b=np.asarray(b_rows, np.float64),
         h=np.asarray(h_rows, np.float64), xmax=xmax)
-    return lp, RoutingIndex(kf, ke, kw, n_inj, n_theta)
+    return lp, RoutingIndex(kf, ke, kw, n_inj, n_theta,
+                            eq_keys=eq_keys, ub_keys=ub_keys)
 
 
 # ---------------------------------------------------------------------------
@@ -417,6 +454,40 @@ class FlowPath:
     tx_wavelength: int         # wavelength on the first hop (eq. 47 bookkeeping)
 
 
+def _out_edges(p: ScheduleProblem) -> list[list[int]]:
+    out: list[list[int]] = [[] for _ in range(p.topo.n_vertices)]
+    for e in range(p.topo.n_edges):
+        out[int(p.e_src[e])].append(e)
+    return out
+
+
+def _route_search(p: ScheduleProblem, out_edges, src: int, dst: int,
+                  usable, convert_ok) -> list[tuple[int, int]] | None:
+    """DFS over (vertex, arrival wavelength) states; usable(e, w) gates
+    which hops may be taken, convert_ok[u] whether vertex u may change
+    wavelength (electronic O/E conversion).  Returns [(edge, w), ...] or
+    None if dst is unreachable."""
+    W = p.topo.n_wavelengths
+    e_dst = p.e_dst
+    stack = [(src, -1, [])]
+    seen = set()
+    while stack:
+        u, w_in, trail = stack.pop()
+        if u == dst:
+            return trail
+        if (u, w_in) in seen:
+            continue
+        seen.add((u, w_in))
+        convert = (w_in == -1) or convert_ok[u]
+        for e in out_edges[u]:
+            for w in range(W):
+                if not convert and w != w_in:
+                    continue
+                if usable(e, w):
+                    stack.append((int(e_dst[e]), w, trail + [(e, w)]))
+    return None
+
+
 def path_decompose(p: ScheduleProblem, idx: RoutingIndex,
                    vol: np.ndarray) -> list[FlowPath]:
     """Decompose per-flow (edge, wavelength) volumes into src->dst paths.
@@ -428,33 +499,12 @@ def path_decompose(p: ScheduleProblem, idx: RoutingIndex,
     its source transmits on, so eq. 47 can be enforced per path."""
     F, E, W, _ = p.shape_x
     passive = ~(p.is_server | p.is_switch)
-    e_src, e_dst = p.e_src, p.e_dst
     kf, ke, kw = idx.kf, idx.ke, idx.kw
-    out_edges: list[list[int]] = [[] for _ in range(p.topo.n_vertices)]
-    for e in range(E):
-        out_edges[int(e_src[e])].append(e)
+    out_edges = _out_edges(p)
     k_of = {(int(kf[k]), int(ke[k]), int(kw[k])): k for k in range(len(kf))}
 
     def _search(src, dst, usable, convert_ok):
-        """DFS over (vertex, arrival wavelength) states; usable(e, w) gates
-        which hops may be taken."""
-        stack = [(src, -1, [])]
-        seen = set()
-        while stack:
-            u, w_in, trail = stack.pop()
-            if u == dst:
-                return trail
-            if (u, w_in) in seen:
-                continue
-            seen.add((u, w_in))
-            convert = (w_in == -1) or convert_ok[u]
-            for e in out_edges[u]:
-                for w in range(W):
-                    if not convert and w != w_in:
-                        continue
-                    if usable(e, w):
-                        stack.append((int(e_dst[e]), w, trail + [(e, w)]))
-        return None
+        return _route_search(p, out_edges, src, dst, usable, convert_ok)
 
     convert_ok = ~passive
     paths: list[FlowPath] = []
@@ -502,18 +552,21 @@ def path_decompose(p: ScheduleProblem, idx: RoutingIndex,
 # ---------------------------------------------------------------------------
 
 def temporal_pack(p: ScheduleProblem, idx: RoutingIndex,
-                  x_route: np.ndarray) -> np.ndarray:
+                  x_route: np.ndarray, *,
+                  paths: list[FlowPath] | None = None) -> np.ndarray:
     """Quantize routed path volumes into slots, earliest-first water-filling.
 
     Every decomposed path ships volume v_p <= remaining_p per slot subject
     to link/server/switch caps; for PON3 each source server transmits on a
     single wavelength per slot (eq. 47), chosen greedily as the wavelength
-    with the largest remaining demand at that server."""
+    with the largest remaining demand at that server.  `paths` skips the
+    decomposition when the caller already ran path_decompose on x_route."""
     F, E, W, T = p.shape_x
     D = p.topo.slot_duration
     kf, ke, kw = idx.kf, idx.ke, idx.kw
     K = len(kf)
-    paths = path_decompose(p, idx, np.maximum(x_route[:K], 0.0))
+    if paths is None:
+        paths = path_decompose(p, idx, np.maximum(x_route[:K], 0.0))
     if not paths:
         return np.zeros((F, E, W, T))
     P = len(paths)
@@ -623,11 +676,20 @@ def temporal_pack(p: ScheduleProblem, idx: RoutingIndex,
 
 @dataclasses.dataclass
 class FastPathResult:
-    schedule: np.ndarray
-    metrics: Metrics
+    schedule: np.ndarray      # x[f, e, w, t] in Gbits (exact paper tensor)
+    metrics: Metrics          # exact core.timeslot.evaluate numbers (J, s)
     lp_lower_bound: float     # theta (min-time) or LP objective (min-energy)
     lp_primal_residual: float
-    remaining_gbits: float
+    remaining_gbits: float    # demand the packer could not place in-horizon
+    # PDHG terminal state + LP indexing, retained so this solve can seed an
+    # incremental re-solve on a degraded topology (resolve_incremental /
+    # solve_fast_ensemble).  None only for results predating these fields.
+    lp_x: np.ndarray | None = None
+    lp_y: np.ndarray | None = None
+    index: RoutingIndex | None = None
+    paths: list[FlowPath] | None = None
+    iterations: int = 0       # PDHG iterations actually spent
+    lp_cscale: float = 1.0    # max|c| the LP was normalized by (duals scale)
 
 
 def _assemble_fast_result(p: ScheduleProblem, lp: StructuredLP,
@@ -636,17 +698,40 @@ def _assemble_fast_result(p: ScheduleProblem, lp: StructuredLP,
     """Pack the LP routing into slots and re-score it with the exact paper
     model — shared by the per-instance and batched fast paths so their
     reported numbers can never drift apart."""
-    x = temporal_pack(p, idx, res.x)
+    K = len(idx.kf)
+    paths = path_decompose(p, idx, np.maximum(res.x[:K], 0.0))
+    x = temporal_pack(p, idx, res.x, paths=paths)
     m = evaluate(p, x)
     lb = float(res.x[-1]) if idx.n_theta else float(lp.c @ res.x)
     return FastPathResult(schedule=x, metrics=m, lp_lower_bound=lb,
                           lp_primal_residual=res.primal_residual,
                           remaining_gbits=float(np.maximum(
-                              p.coflow.size - m.served, 0.0).sum()))
+                              p.coflow.size - m.served, 0.0).sum()),
+                          lp_x=res.x, lp_y=res.y, index=idx, paths=paths,
+                          iterations=res.iterations,
+                          lp_cscale=max(float(np.abs(lp.c).max(initial=0.0)),
+                                        1e-12))
 
 
 def solve_fast(p: ScheduleProblem, objective: str = "energy", *,
                iters: int = 4000, tol: float | None = None) -> FastPathResult:
+    """Single-instance fast path: routing LP -> PDHG -> slot packing ->
+    exact re-scoring.
+
+    Args:
+      p: the problem; flow sizes in Gbits, capacities/rates in Gbps.
+      objective: "energy" (minimize Joules, eq. 22 surrogate) or "time"
+        (minimize the continuous completion-time bound theta).
+      iters: PDHG iterations per restart rung (doubled on each restart,
+        up to solve_lp's max_restarts).
+      tol: primal-residual target in Gbits; default 1e-4 * max demand.
+
+    Returns a FastPathResult whose `metrics` are always the exact paper
+    equations evaluated on the packed schedule — never LP estimates.
+
+    Determinism: bitwise-reproducible for a fixed (jax version, platform,
+    precision config); there is no RNG anywhere in the fast path, so
+    repeated calls with equal inputs return identical schedules."""
     lp, idx = build_routing_lp(p, objective)
     res = solve_lp(lp, iters=iters, tol=tol)
     return _assemble_fast_result(p, lp, idx, res)
@@ -775,8 +860,9 @@ def _per_instance_residuals(bs: BlockStackedLP, x: np.ndarray) -> np.ndarray:
 
 def solve_lp_batch(lps: list[StructuredLP], iters: int = 4000, *,
                    tol: float | None = None, max_restarts: int = 3,
-                   adaptive: bool = True,
-                   chunk: int = 500) -> list[PDHGResult]:
+                   adaptive: bool = True, chunk: int = 500,
+                   warm_starts: list[tuple[np.ndarray, np.ndarray]] | None
+                   = None) -> list[PDHGResult]:
     """Solve a batch of LPs over the instance axis in one jitted PDHG
     dispatch (block-diagonal stacking; see BlockStackedLP for why this
     beats a literal vmap on CPU).
@@ -791,7 +877,17 @@ def solve_lp_batch(lps: list[StructuredLP], iters: int = 4000, *,
     the levels are the exact solve_lp warm-restart ladder (iters, then
     doubled), reproducing per-instance solve_lp results bit-for-bit
     (used by equivalence tests).  Both cap at the ladder's total budget
-    (sum of iters * 2**a for a <= max_restarts)."""
+    (sum of iters * 2**a for a <= max_restarts).
+
+    `warm_starts[i] = (x0, y0)` seeds instance i's primal/dual iterates
+    (shapes (lps[i].n,) and (lps[i].m,), y0 ordered [eq; ub]); with the
+    adaptive mode an instance already near its tolerance then freezes
+    after the first `chunk`-iteration burst, which is what makes whole
+    failure-ensemble re-solves cheap (see solve_fast_ensemble).
+
+    Determinism: no RNG; results are reproducible for fixed inputs and
+    jax build, and independent of batch composition up to the float
+    reduction order of the stacked scatters."""
     B = len(lps)
     all_tols = np.array([tol if tol is not None
                          else 1e-4 * max(float(np.abs(lp.b).max(initial=0.0)),
@@ -853,6 +949,14 @@ def solve_lp_batch(lps: list[StructuredLP], iters: int = 4000, *,
     iters_fin = np.zeros(B, dtype=int)
     active = list(range(B))
     states = None
+    if warm_starts is not None:
+        assert len(warm_starts) == B
+        states = {i: (np.asarray(x0, np.float64), np.asarray(y0, np.float64))
+                  for i, (x0, y0) in enumerate(warm_starts)}
+        for i, (x0, y0) in states.items():
+            assert x0.shape == (lps[i].n,) and y0.shape == (lps[i].m,), \
+                (i, x0.shape, y0.shape, lps[i].n, lps[i].m)
+            x_fin[i], y_fin[i] = x0, y0
     total_budget = sum(iters * 2 ** a for a in range(max_restarts + 1))
     budget = max(chunk, iters // 4) if adaptive else iters
     spent = 0
@@ -881,7 +985,8 @@ def solve_lp_batch(lps: list[StructuredLP], iters: int = 4000, *,
         cscale = max(float(np.abs(lp.c).max(initial=0.0)), 1e-12)
         objn = obj / cscale
         gap = abs(objn + float(qi @ y_fin[i])) / (1.0 + abs(objn))
-        out.append(PDHGResult(xi, float(res_fin[i]), gap, int(iters_fin[i])))
+        out.append(PDHGResult(xi, float(res_fin[i]), gap, int(iters_fin[i]),
+                              y=y_fin[i]))
     return out
 
 
@@ -896,17 +1001,199 @@ def solve_fast_batch(problems: list[ScheduleProblem],
     jitted adaptive PDHG dispatch — one XLA call for the whole seed
     vector instead of one per instance, with the convergence loop fused
     in-graph (see solve_lp_batch); slot packing and the exact paper-model
-    re-evaluation stay per-instance (they are cheap numpy passes)."""
+    re-evaluation stay per-instance (they are cheap numpy passes).
+
+    Units and determinism are as in solve_fast; each element of the
+    returned list reports exact paper-model metrics for its instance.
+    Instances may differ in capacities (e.g. the same topology under
+    different degradations) — only vertex/edge structure must match;
+    for fully heterogeneous instance lists use solve_fast_ensemble
+    (which this call delegates to after the structure check)."""
     if not problems:
         return []
     t0 = problems[0].topo
     for p in problems[1:]:
-        if p.topo is not t0 and (p.topo.name != t0.name
-                                 or p.topo.n_edges != t0.n_edges):
-            raise ValueError("solve_fast_batch requires a shared topology; "
-                             f"got {t0.name} and {p.topo.name}")
+        t = p.topo
+        if t is not t0 and (t.n_vertices != t0.n_vertices
+                            or t.n_edges != t0.n_edges
+                            or not np.array_equal(t.edges, t0.edges)):
+            raise ValueError("solve_fast_batch requires a shared topology "
+                             f"structure; got {t0.name} and {t.name}")
+    return solve_fast_ensemble(problems, objective, iters=iters, tol=tol,
+                               adaptive=adaptive, chunk=500)
+
+
+# ---------------------------------------------------------------------------
+# Incremental re-solves (degraded topologies, core.failures)
+# ---------------------------------------------------------------------------
+
+def project_warm_start(warm: FastPathResult, p_dst: ScheduleProblem,
+                       lp_dst: StructuredLP, idx_dst: RoutingIndex
+                       ) -> tuple[np.ndarray, np.ndarray]:
+    """Map a finished solve's PDHG state onto a structurally related LP.
+
+    Intended for healthy -> degraded re-solves where `p_dst` keeps the
+    source instance's device/edge indexing (core.failures preserves it):
+
+      * the healthy routing is re-used *by path* — each decomposed
+        src->dst path whose every (edge, wavelength) hop is still
+        admissible keeps its volume; paths crossing a failed link are
+        dropped and their volume is re-routed onto any surviving
+        admissible route (found by the same wavelength-continuity DFS
+        path_decompose uses), so the primal start conserves flow exactly;
+      * duals transfer row-by-row through RoutingIndex.eq_keys/ub_keys
+        (rows that vanished with their edges are dropped, new rows start
+        at zero).
+
+    Returns (x0, y0) with x0 clipped into [0, xmax]; feed them to
+    solve_lp or solve_lp_batch(warm_starts=...).  The projection is a
+    heuristic start, not a feasible point — PDHG repairs the remaining
+    demand/capacity mismatch, which for localized failures takes a small
+    fraction of a cold solve's iterations."""
+    src_idx = warm.index
+    if src_idx is None or warm.lp_x is None:
+        raise ValueError("warm result lacks PDHG state (lp_x/index); "
+                         "it must come from solve_fast/solve_fast_batch")
+    F, E, W, _ = p_dst.shape_x
+    K_dst = len(idx_dst.kf)
+    key_dst = (idx_dst.kf * E + idx_dst.ke) * W + idx_dst.kw   # sorted
+
+    def dst_pos(f, e, w):
+        key = (f * E + e) * W + w
+        j = int(np.searchsorted(key_dst, key))
+        return j if j < K_dst and key_dst[j] == key else -1
+
+    x0 = np.zeros(lp_dst.n)
+    ke_s, kw_s = src_idx.ke, src_idx.kw
+    size_dst = p_dst.coflow.size
+    lost = np.zeros(F)
+    shipped = np.zeros(F)
+    for path in warm.paths or []:
+        f = path.flow
+        if size_dst[f] <= 0.0 or path.volume <= 0.0:
+            continue
+        hops = [(int(ke_s[k]), int(kw_s[k])) for k in path.triples]
+        pos = [dst_pos(f, e, w) for e, w in hops]
+        vol = min(path.volume, float(size_dst[f]) - shipped[f])
+        if vol <= 0.0:
+            continue
+        if all(j >= 0 for j in pos):
+            for j in pos:
+                x0[j] += vol
+            x0[K_dst + f * W + hops[0][1]] += vol
+            shipped[f] += vol
+        else:
+            lost[f] += vol
+
+    # re-route volume stranded by failed hops onto any surviving route
+    out_edges = _out_edges(p_dst)
+    convert_ok = p_dst.is_server | p_dst.is_switch
+    for f in np.flatnonzero(lost > 0.0):
+        f = int(f)
+        vol = min(lost[f], float(size_dst[f]) - shipped[f])
+        if vol <= 0.0:
+            continue
+        trail = _route_search(
+            p_dst, out_edges, int(p_dst.coflow.src[f]),
+            int(p_dst.coflow.dst[f]),
+            lambda e, w, f=f: dst_pos(f, e, w) >= 0, convert_ok)
+        if not trail:
+            continue
+        for e, w in trail:
+            x0[dst_pos(f, e, w)] += vol
+        x0[K_dst + f * W + trail[0][1]] += vol
+        shipped[f] += vol
+
+    if idx_dst.n_theta:
+        # theta couples every capacity row (sum x <= limit * theta); the
+        # healthy theta is stale on a degraded fabric, so lift it to the
+        # smallest value that makes the projected routing capacity-feasible
+        # — otherwise the warm start dumps residual on every coupled row
+        theta = float(warm.lp_x[-1]) if src_idx.n_theta else 0.0
+        kx = np.zeros(lp_dst.m)
+        np.add.at(kx, lp_dst.row, lp_dst.val * x0[lp_dst.col])
+        th = (lp_dst.col == lp_dst.n - 1) & (lp_dst.row >= lp_dst.m_eq)
+        if th.any():
+            limits = -lp_dst.val[th]
+            need = kx[lp_dst.row[th]] / np.maximum(limits, 1e-12)
+            theta = max(theta, float(need.max(initial=0.0)))
+        x0[-1] = theta
+    x0 = np.clip(x0, 0.0, np.where(np.isfinite(lp_dst.xmax),
+                                   lp_dst.xmax, 1e12))
+
+    y0 = np.zeros(lp_dst.m)
+    if (warm.lp_y is not None and src_idx.eq_keys is not None
+            and idx_dst.eq_keys is not None):
+        # both LPs are solved with max-normalized objectives (c / cscale);
+        # duals of the normalized problems relate by the cscale ratio, so
+        # rescale before transplanting (matters when a failure changes the
+        # cost vector, e.g. halved capacities double the device-cost terms)
+        cscale_dst = max(float(np.abs(lp_dst.c).max(initial=0.0)), 1e-12)
+        rescale = warm.lp_cscale / cscale_dst
+        m_eq_src = len(src_idx.eq_keys)
+        src_eq = {k: i for i, k in enumerate(src_idx.eq_keys)}
+        src_ub = {k: i for i, k in enumerate(src_idx.ub_keys)}
+        for i, k in enumerate(idx_dst.eq_keys):
+            j = src_eq.get(k)
+            if j is not None:
+                y0[i] = warm.lp_y[j] * rescale
+        for i, k in enumerate(idx_dst.ub_keys):
+            j = src_ub.get(k)
+            if j is not None:
+                y0[lp_dst.m_eq + i] = warm.lp_y[m_eq_src + j] * rescale
+    return x0, y0
+
+
+def resolve_incremental(p: ScheduleProblem, objective: str,
+                        warm: FastPathResult, *, iters: int = 4000,
+                        tol: float | None = None) -> FastPathResult:
+    """Re-solve a degraded instance starting from a healthy solution.
+
+    `p` is the degraded problem (same coflow/flow indexing as the healthy
+    one — core.failures.degrade_problem builds it); `warm` is the healthy
+    instance's FastPathResult.  Routes over failed edges are dropped,
+    affected flows are re-routed via the decomposed healthy paths, and
+    PDHG restarts from the projected primal/dual state instead of zero.
+    Output is a full FastPathResult (packed, exactly re-scored) and can
+    itself warm-start further re-solves (cascading failures)."""
+    lp, idx = build_routing_lp(p, objective)
+    x0, y0 = project_warm_start(warm, p, lp, idx)
+    res = solve_lp(lp, iters=iters, tol=tol, x0=x0, y0=y0)
+    return _assemble_fast_result(p, lp, idx, res)
+
+
+def solve_fast_ensemble(problems: list[ScheduleProblem],
+                        objective: str = "energy", *,
+                        warm: list[FastPathResult] | None = None,
+                        iters: int = 4000, tol: float | None = None,
+                        adaptive: bool = True,
+                        chunk: int | None = None) -> list[FastPathResult]:
+    """Batched fast path over a (possibly heterogeneous) instance list.
+
+    Unlike solve_fast_batch this does not require a shared topology —
+    the block-diagonal stacking never did — so a whole failure ensemble
+    (one degraded topology per member) solves in the same fused adaptive
+    dispatches as a seed vector.  With `warm[i]` set to the healthy
+    result that instance i degrades, every member starts from its
+    projected healthy state (project_warm_start) and the in-graph
+    freezing stops it within one residual-check chunk of convergence;
+    benchmarks/failure_bench.py measures the aggregate effect vs cold
+    starts."""
+    if not problems:
+        return []
     built = [build_routing_lp(p, objective) for p in problems]
     lps = [lp for lp, _ in built]
-    results = solve_lp_batch(lps, iters=iters, tol=tol, adaptive=adaptive)
+    warm_starts = None
+    if warm is not None:
+        assert len(warm) == len(problems)
+        warm_starts = [project_warm_start(w, p, lp, idx)
+                       for w, p, (lp, idx) in zip(warm, problems, built)]
+    if chunk is None:
+        # warm starts usually converge within a burst or two, so check
+        # residuals at a finer grain than the cold default — the saved
+        # iterations outweigh the extra on-device segment-max checks
+        chunk = 250 if warm_starts is not None else 500
+    results = solve_lp_batch(lps, iters=iters, tol=tol, adaptive=adaptive,
+                             chunk=chunk, warm_starts=warm_starts)
     return [_assemble_fast_result(p, lp, idx, res)
             for p, (lp, idx), res in zip(problems, built, results)]

@@ -29,6 +29,19 @@ TOL = 1e-6
 
 @dataclasses.dataclass
 class ScheduleProblem:
+    """One co-flow scheduling instance: topology + demand + horizon.
+
+    Units (paper Tables II-III): flow sizes and every schedule-tensor
+    entry are **Gbits**; link capacities, `rho`, and `sigma` are **Gbps**
+    (not GB/s — 1 Gbit = 0.125 GB); `slot_duration` is seconds, so a
+    slot ships at most `cap * D` Gbits per (edge, wavelength).
+
+    Construction is deterministic and side-effect free: `__post_init__`
+    derives index arrays (`e_src`/`e_dst`, (F, E) `flow_edge_mask`,
+    (E, W) `edge_w_ok`) from the topology alone — two problems built
+    from equal inputs are interchangeable, which is what lets the sweep
+    rebuild problems freely during its retry ladder."""
+
     topo: Topology
     coflow: CoflowSet
     n_slots: int                  # |T|
@@ -118,8 +131,12 @@ def _hop_distances(topo: Topology) -> np.ndarray:
         return cached
     V = topo.n_vertices
     nbrs: list[list[int]] = [[] for _ in range(V)]
-    for u, v in topo.edges:
-        nbrs[int(u)].append(int(v))
+    # dead edges (all-zero capacity, e.g. cut by core.failures) are not
+    # traversable — distances must reflect the degraded connectivity
+    alive = topo.cap.sum(axis=1) > 0.0
+    for e, (u, v) in enumerate(topo.edges):
+        if alive[e]:
+            nbrs[int(u)].append(int(v))
     dist = np.full((V, V), np.inf)
     for s in range(V):
         dist[s, s] = 0.0
@@ -174,7 +191,13 @@ def _delta_from_x(p: ScheduleProblem, x: np.ndarray) -> np.ndarray:
 
 
 def evaluate(p: ScheduleProblem, x: np.ndarray) -> Metrics:
-    """Exact accounting of a schedule tensor with the paper's equations."""
+    """Exact accounting of a schedule tensor with the paper's equations.
+
+    `x` has shape (F, E, W, T) in Gbits; returns energy in Joules
+    (eqs. 19-22), completion time in seconds (eqs. 39-45), and the worst
+    constraint violation in Gbits (feasible iff <= 1e-4).  Pure numpy,
+    deterministic, and backend-independent — this is the single source
+    of truth both solver backends and all sweeps report through."""
     F, E, W, T = p.shape_x
     assert x.shape == (F, E, W, T), (x.shape, p.shape_x)
     D = p.topo.slot_duration

@@ -56,7 +56,15 @@ class CoflowSet:
 
 @dataclasses.dataclass(frozen=True)
 class TrafficPattern:
-    """One point of the paper's traffic grid (placement x skew x scale)."""
+    """One point of the paper's traffic grid (placement x skew x scale).
+
+    `total_gbits` is the whole shuffle volume in **Gbits** (the paper's
+    unit; divide by 8 for GB), split evenly across `n_map` map outputs
+    ("uniform") or ~U(0, total) rescaled ("daytona"), then fanned out
+    1/n_reduce to each reducer — so every instance has exactly
+    F = n_map * n_reduce flows.  Placement/size draws are fully
+    determined by the seed passed to `generate`/`generate_batch`
+    (numpy default_rng; no global RNG state is read or written)."""
 
     name: str = "uniform"
     placement: str = "spread"

@@ -8,9 +8,14 @@ of a Python loop — re-scores every schedule with the exact paper model
 core.oracle MILP, and emits paper-style CSV + markdown tables (the
 Figs. 6-14 comparisons).
 
+`--failures` multiplies the grid by degraded fabrics: per failure preset
+each seed's instance re-solves on a deterministically sampled degraded
+topology (core.failures), warm-started from its healthy PDHG state, and
+the report gains capacity-lost / survivability columns.
+
 CLI:  PYTHONPATH=src python -m repro.sweep --topos all \
           --objectives energy,completion --patterns uniform,skew,packed \
-          --seeds 8 --out results/sweep
+          --seeds 8 --failures link1,switch --out results/sweep
 """
 from .runner import SweepRecord, SweepSpec, run_sweep
 from .report import write_csv, write_markdown

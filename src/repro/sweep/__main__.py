@@ -1,13 +1,15 @@
 """CLI for the batched scenario sweep.
 
-Example (the paper's full grid, 8 seeds per cell):
+Example (the paper's full grid, 8 seeds per cell, plus degraded-fabric
+re-solves under single link cuts and switch outages):
 
     PYTHONPATH=src python -m repro.sweep --topos all \
         --objectives energy,completion --patterns uniform,skew,packed \
-        --seeds 8 --out results/sweep
+        --seeds 8 --failures link1,switch --out results/sweep
 
 Writes <out>/results.csv (one row per instance, exact paper-model
-metrics) and <out>/results.md (mean +/- std tables per objective).
+metrics) and <out>/results.md (mean +/- std tables per objective, plus a
+degraded-fabric survivability table when --failures is given).
 """
 from __future__ import annotations
 
@@ -15,7 +17,7 @@ import argparse
 import pathlib
 import time
 
-from repro.core import topology, traffic
+from repro.core import failures, topology, traffic
 
 from .report import write_csv, write_markdown
 from .runner import ALL_TOPOS, OBJECTIVES, SweepSpec, run_sweep
@@ -46,6 +48,11 @@ def main(argv=None) -> int:
                          f"({', '.join(traffic.PATTERNS)})")
     ap.add_argument("--seeds", type=int, default=8,
                     help="number of seeds per grid cell (0..N-1)")
+    ap.add_argument("--failures", nargs="?", const="all", default="",
+                    help="failure presets for degraded-fabric re-solves: "
+                         f"comma list or 'all' "
+                         f"({', '.join(k for k in failures.SCENARIOS if k != 'none')}); "
+                         "bare --failures means 'all'")
     ap.add_argument("--total-gbits", type=float, default=30.0)
     ap.add_argument("--n-map", type=int, default=10)
     ap.add_argument("--n-reduce", type=int, default=6)
@@ -61,11 +68,15 @@ def main(argv=None) -> int:
                     help="output directory for results.csv / results.md")
     args = ap.parse_args(argv)
 
+    fail_universe = {k: v for k, v in failures.SCENARIOS.items()
+                     if k != "none"}
     spec = SweepSpec(
         topos=_csv_list(args.topos, topology.BUILDERS, "topology"),
         objectives=_csv_list(args.objectives, OBJECTIVES, "objective"),
         patterns=_csv_list(args.patterns, traffic.PATTERNS, "pattern"),
         seeds=tuple(range(args.seeds)),
+        failures=(_csv_list(args.failures, fail_universe, "failure preset")
+                  if args.failures else ()),
         total_gbits=args.total_gbits, n_map=args.n_map,
         n_reduce=args.n_reduce, n_slots=args.slots or None,
         iters=args.iters, oracle_check=args.oracle_check,

@@ -3,6 +3,9 @@
 The markdown layout mirrors the paper's §VI comparisons (Figs. 6-14):
 one table per objective, topologies as rows, traffic patterns as column
 groups, mean +/- std over the seed vector for energy and completion.
+Degraded-fabric records (SweepRecord.failure != "none") get their own
+survivability table — capacity lost, Gbits delivered, and the degraded
+E/M — aggregated over patterns and seeds.
 """
 from __future__ import annotations
 
@@ -38,8 +41,10 @@ def _fmt(mean: float, std: float, digits: int = 1) -> str:
 def write_markdown(records: list[SweepRecord], path) -> pathlib.Path:
     path = pathlib.Path(path)
     path.parent.mkdir(parents=True, exist_ok=True)
+    degraded = [r for r in records if r.failure != "none"]
+    healthy = [r for r in records if r.failure == "none"]
     by_key: dict[tuple, list[SweepRecord]] = defaultdict(list)
-    for r in records:
+    for r in healthy:
         by_key[(r.objective, r.topo, r.pattern)].append(r)
     objectives = sorted({r.objective for r in records})
     topos = list(dict.fromkeys(r.topo for r in records))
@@ -78,6 +83,42 @@ def write_markdown(records: list[SweepRecord], path) -> pathlib.Path:
             lines.append(row)
         lines.append("")
 
+    if degraded:
+        lines += ["## Degraded fabrics (failure scenarios)", "",
+                  "Warm-started incremental re-solves "
+                  "(`core.solver.solve_fast_ensemble`); capacity lost is "
+                  "the fraction of aggregate Gbps removed, survivability "
+                  "the Gbits delivered over the healthy demand.  Mean ± "
+                  "std over patterns × seeds.", ""]
+        fails = list(dict.fromkeys(r.failure for r in degraded))
+        by_fk: dict[tuple, list[SweepRecord]] = defaultdict(list)
+        for r in degraded:
+            by_fk[(r.objective, r.topo, r.failure)].append(r)
+        for obj in objectives:
+            if not any(k[0] == obj for k in by_fk):
+                continue
+            lines += [f"### min-{obj}", "",
+                      "| topology | failure | capacity lost | survivability "
+                      "| E (J) | M (s) |",
+                      "|---|---|---|---|---|---|"]
+            for topo in topos:
+                for fl in fails:
+                    rs = by_fk.get((obj, topo, fl), [])
+                    if not rs:
+                        continue
+                    cap = np.array([r.degradation_ratio for r in rs])
+                    sv = np.array([r.survivability for r in rs])
+                    e = np.array([r.energy_j for r in rs])
+                    m = np.array([r.completion_s for r in rs])
+                    flag = "" if all(r.feasible for r in rs) else " ⚠"
+                    lines.append(
+                        f"| {topo} | {fl} "
+                        f"| {cap.mean():.1%} ± {cap.std():.1%} "
+                        f"| {sv.mean():.1%} ± {sv.std():.1%}{flag} "
+                        f"| {_fmt(e.mean(), e.std())} "
+                        f"| {_fmt(m.mean(), m.std(), 3)} |")
+            lines.append("")
+
     checked = [r for r in records if r.oracle_gap is not None]
     if checked:
         lines += ["## Oracle spot-check (exact MILP, core.oracle)", "",
@@ -86,7 +127,8 @@ def write_markdown(records: list[SweepRecord], path) -> pathlib.Path:
         for r in checked:
             exact = (r.oracle_energy_j if r.objective == "energy"
                      else r.oracle_completion_s)
-            lines.append(f"| {r.topo}/{r.pattern}/seed{r.seed} "
+            fail = "" if r.failure == "none" else f"+{r.failure}"
+            lines.append(f"| {r.topo}{fail}/{r.pattern}/seed{r.seed} "
                          f"| min-{r.objective} | {r.primary:.4g} "
                          f"| {exact:.4g} | {r.oracle_gap:+.2%} |")
         lines.append("")

@@ -1,13 +1,20 @@
-"""Sweep driver: fan out over topology x objective x pattern x seeds.
+"""Sweep driver: topology x objective x pattern x seeds (x failures).
 
 Per (topology, pattern): one `generate_batch` builds the seed vector of
 co-flow sets; per objective the whole vector solves in a few stacked
 adaptive PDHG dispatches (core.solver.solve_fast_batch).  Metrics are
-always the
-exact paper-model numbers from core.timeslot.evaluate — never LP
-estimates.  A deterministic subsample (the cheapest instances first) can
-be re-solved with the core.oracle MILP, recording the optimality gap of
-the fast path against the exact branch-and-cut schedule.
+always the exact paper-model numbers from core.timeslot.evaluate — never
+LP estimates.  A deterministic subsample (the cheapest instances first)
+can be re-solved with the core.oracle MILP, recording the optimality gap
+of the fast path against the exact branch-and-cut schedule.
+
+With `SweepSpec.failures` set (CLI `--failures`), every healthy cell
+additionally re-solves under degraded fabrics: per seed a deterministic
+scenario is drawn (core.failures.sample), the degraded instance keeps
+the healthy edge indexing, and the whole failure ensemble re-solves in
+one warm-started batched dispatch (core.solver.solve_fast_ensemble)
+seeded from the healthy solutions.  Records carry the capacity
+degradation ratio and survivability (served / offered Gbits).
 """
 from __future__ import annotations
 
@@ -17,7 +24,7 @@ from typing import Callable
 
 import numpy as np
 
-from repro.core import oracle, solver, timeslot, topology, traffic
+from repro.core import failures, oracle, solver, timeslot, topology, traffic
 
 # user-facing objective name -> core.solver/oracle internal name
 OBJECTIVES = {"energy": "energy", "completion": "time"}
@@ -31,6 +38,9 @@ class SweepSpec:
     objectives: tuple[str, ...] = ("energy", "completion")
     patterns: tuple[str, ...] = ("uniform", "skew", "packed")
     seeds: tuple[int, ...] = tuple(range(8))
+    # failure presets (core.failures.SCENARIOS names); per preset each seed
+    # draws one deterministic scenario and re-solves warm-started
+    failures: tuple[str, ...] = ()
     total_gbits: float = 30.0
     n_map: int = 10
     n_reduce: int = 6
@@ -62,6 +72,13 @@ class SweepSpec:
             if pt not in traffic.PATTERNS:
                 raise ValueError(f"unknown pattern {pt!r}; "
                                  f"have {sorted(traffic.PATTERNS)}")
+        for fl in self.failures:
+            if fl not in failures.SCENARIOS or fl == "none":
+                # "none" is rejected too: its records would carry
+                # failure="none" and be misfiled as healthy rows in the
+                # report — an empty `failures` tuple is the healthy run
+                raise ValueError(f"unknown failure preset {fl!r}; "
+                                 f"have {sorted(k for k in failures.SCENARIOS if k != 'none')}")
 
 
 @dataclasses.dataclass
@@ -81,6 +98,9 @@ class SweepRecord:
     lp_primal_residual: float
     remaining_gbits: float
     solve_s: float                    # amortized wall time per instance
+    failure: str = "none"             # failure preset ("none" = healthy)
+    degradation_ratio: float = 0.0    # fraction of aggregate Gbps lost
+    survivability: float = 1.0        # served / offered Gbits
     oracle_energy_j: float | None = None
     oracle_completion_s: float | None = None
     oracle_gap: float | None = None   # (fast - oracle) / oracle, primary metric
@@ -102,12 +122,9 @@ def _problems_for(topo, pat: traffic.TrafficPattern, spec: SweepSpec):
     return probs
 
 
-def _solve_group(probs, internal_obj: str, spec: SweepSpec):
-    """Batched solve with a per-instance horizon-doubling retry for any
-    schedule the greedy packer could not finish inside the horizon."""
-    t0 = time.perf_counter()
-    results = solver.solve_fast_batch(probs, internal_obj, iters=spec.iters,
-                                      tol=spec.tol)
+def _retry_unfinished(probs, results, internal_obj: str, spec: SweepSpec):
+    """Per-instance horizon-doubling retry for any schedule the greedy
+    packer could not finish inside the horizon (in place)."""
     for i, (p, r) in enumerate(zip(probs, results)):
         tries = 0
         while (r.remaining_gbits > 1e-6 or not r.metrics.feasible) and tries < 2:
@@ -120,7 +137,51 @@ def _solve_group(probs, internal_obj: str, spec: SweepSpec):
                                   tol=spec.tol)
             tries += 1
         probs[i], results[i] = p, r
+
+
+def _solve_group(probs, internal_obj: str, spec: SweepSpec):
+    """Batched healthy solve + retry ladder; returns amortized wall time."""
+    t0 = time.perf_counter()
+    results = solver.solve_fast_batch(probs, internal_obj, iters=spec.iters,
+                                      tol=spec.tol)
+    _retry_unfinished(probs, results, internal_obj, spec)
     return results, (time.perf_counter() - t0) / max(len(probs), 1)
+
+
+def _solve_failure_group(healthy_probs, healthy_results, fail_name: str,
+                         internal_obj: str, spec: SweepSpec):
+    """Degrade every healthy instance under one failure preset and re-solve
+    the whole ensemble in a single warm-started batched dispatch."""
+    t0 = time.perf_counter()
+    probs = [failures.degrade_problem(
+                 p, failures.sample(p.topo, fail_name, int(seed)))
+             for seed, p in zip(spec.seeds, healthy_probs)]
+    results = solver.solve_fast_ensemble(probs, internal_obj,
+                                         warm=healthy_results,
+                                         iters=spec.iters, tol=spec.tol)
+    _retry_unfinished(probs, results, internal_obj, spec)
+    return probs, results, (time.perf_counter() - t0) / max(len(probs), 1)
+
+
+def _record(topo_name, obj, pat_name, seed, p, r, per_inst_s, *,
+            offered: float, failure: str = "none",
+            degradation_ratio: float = 0.0) -> SweepRecord:
+    """One SweepRecord from a solved instance.  `offered` is the healthy
+    demand in Gbits (a degraded instance's own coflow excludes flows the
+    failure disconnected, but survivability is measured against what the
+    job wanted to ship)."""
+    m = r.metrics
+    return SweepRecord(
+        topo=topo_name, objective=obj, pattern=pat_name,
+        seed=int(seed), n_flows=p.coflow.n_flows,
+        total_gbits=p.coflow.total_gbits, n_slots=p.n_slots,
+        energy_j=m.energy_j, completion_s=m.completion_s,
+        feasible=bool(m.feasible), max_violation=m.max_violation,
+        lp_lower_bound=r.lp_lower_bound,
+        lp_primal_residual=r.lp_primal_residual,
+        remaining_gbits=r.remaining_gbits, solve_s=per_inst_s,
+        failure=failure, degradation_ratio=degradation_ratio,
+        survivability=float(m.served.sum()) / max(offered, 1e-12))
 
 
 def run_sweep(spec: SweepSpec, *, log: Callable[[str], None] | None = None
@@ -142,25 +203,36 @@ def run_sweep(spec: SweepSpec, *, log: Callable[[str], None] | None = None
                 # _solve_group may swap entries during its retry ladder
                 probs = list(base_probs)
                 results, per_inst_s = _solve_group(probs, OBJECTIVES[obj], spec)
-                for seed, p, r in zip(spec.seeds, probs, results):
-                    m = r.metrics
-                    records.append(SweepRecord(
-                        topo=topo_name, objective=obj, pattern=pat_name,
-                        seed=int(seed), n_flows=p.coflow.n_flows,
-                        total_gbits=p.coflow.total_gbits, n_slots=p.n_slots,
-                        energy_j=m.energy_j, completion_s=m.completion_s,
-                        feasible=bool(m.feasible),
-                        max_violation=m.max_violation,
-                        lp_lower_bound=r.lp_lower_bound,
-                        lp_primal_residual=r.lp_primal_residual,
-                        remaining_gbits=r.remaining_gbits,
-                        solve_s=per_inst_s))
+                offered = [bp.coflow.total_gbits for bp in probs]
+                for seed, p, r, off in zip(spec.seeds, probs, results,
+                                           offered):
+                    records.append(_record(topo_name, obj, pat_name, seed,
+                                           p, r, per_inst_s, offered=off))
                     problems.append(p)
                 say(f"{topo_name:10s} {pat_name:8s} min-{obj:10s} "
                     f"{len(probs)} seeds  "
                     f"E={np.mean([x.metrics.energy_j for x in results]):9.1f} J  "
                     f"M={np.mean([x.metrics.completion_s for x in results]):6.3f} s  "
                     f"({per_inst_s*1e3:.0f} ms/inst)")
+                for fail_name in spec.failures:
+                    f_probs, f_results, f_s = _solve_failure_group(
+                        probs, results, fail_name, OBJECTIVES[obj], spec)
+                    ratios, survs = [], []
+                    for seed, hp, off, fp, fr in zip(
+                            spec.seeds, probs, offered, f_probs, f_results):
+                        ratio = failures.degradation_ratio(hp.topo, fp.topo)
+                        rec = _record(topo_name, obj, pat_name, seed, fp, fr,
+                                      f_s, offered=off, failure=fail_name,
+                                      degradation_ratio=ratio)
+                        ratios.append(ratio)
+                        survs.append(rec.survivability)
+                        records.append(rec)
+                        problems.append(fp)
+                    say(f"{topo_name:10s} {pat_name:8s} min-{obj:10s} "
+                        f"+{fail_name:9s} "
+                        f"cap-{np.mean(ratios):5.1%}  "
+                        f"surv={np.mean(survs):6.1%}  "
+                        f"({f_s*1e3:.0f} ms/inst warm)")
     if spec.oracle_check:
         _spot_check(records, problems, spec, say)
     return records, problems

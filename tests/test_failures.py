@@ -1,0 +1,194 @@
+"""Failure engine: schema preservation, determinism, warm-started
+re-solves, and the sweep's --failures axis."""
+import numpy as np
+import pytest
+
+from repro.core import failures, solver, timeslot, topology, traffic
+
+PRESETS = ["link1", "link3", "switch", "device", "degrade50", "brownout"]
+
+
+def small_problem(name="spine-leaf", seed=2, total=8.0):
+    t = topology.build(name)
+    cf = traffic.shuffle_traffic(t, total, n_map=4, n_reduce=3, seed=seed)
+    return timeslot.ScheduleProblem(
+        t, cf, n_slots=timeslot.suggest_n_slots(t, cf), path_slack=2)
+
+
+# ---------------------------------------------------------------------------
+# degraded topologies stay schema-valid
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("preset", PRESETS)
+@pytest.mark.parametrize("name", ["fat-tree", "spine-leaf", "bcube", "dcell",
+                                  "pon3", "pon5"])
+def test_degraded_schema_valid(name, preset):
+    topo = topology.build(name)
+    d = failures.apply(topo, failures.sample(topo, preset, 0))
+    # same devices/edges/wavelengths — only capacities may shrink
+    assert d.devices is topo.devices or d.devices == topo.devices
+    np.testing.assert_array_equal(d.edges, topo.edges)
+    assert d.cap.shape == topo.cap.shape
+    assert (d.cap >= 0.0).all()
+    assert (d.cap <= topo.cap + 1e-12).all()
+    ratio = failures.degradation_ratio(topo, d)
+    assert 0.0 <= ratio <= 1.0
+    if preset != "none":
+        assert ratio > 0.0, preset
+    if name != "pon3":   # pon3's AWGR paths are intentionally one-way
+        d.validate()
+
+
+def test_device_outage_zeroes_incident_edges():
+    topo = topology.build("spine-leaf")
+    scen = failures.fail_device(topo, "spine0")
+    dev = next(i for i, dd in enumerate(topo.devices) if dd.name == "spine0")
+    d = failures.apply(topo, scen)
+    incident = (topo.edges[:, 0] == dev) | (topo.edges[:, 1] == dev)
+    assert (d.cap[incident] == 0.0).all()
+    np.testing.assert_array_equal(d.cap[~incident], topo.cap[~incident])
+
+
+def test_link_cut_closed_under_reversal():
+    topo = topology.build("bcube")
+    scen = failures.sample(topo, "link1", 7)
+    dead = set(scen.cut_edges)
+    for e in list(dead):
+        u, v = topo.edges[e]
+        rev = np.flatnonzero((topo.edges[:, 0] == v)
+                             & (topo.edges[:, 1] == u))
+        assert set(rev.tolist()) <= dead, "reverse direction survived"
+
+
+# ---------------------------------------------------------------------------
+# seeded ensembles are deterministic
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("preset", PRESETS)
+def test_ensemble_deterministic(preset):
+    topo = topology.build("bcube")
+    a = failures.ensemble(topo, preset, range(4))
+    b = failures.ensemble(topo, preset, range(4))
+    assert a == b
+    caps = [failures.apply(topo, s).cap for s in a]
+    for s, cap in zip(b, caps):
+        np.testing.assert_array_equal(failures.apply(topo, s).cap, cap)
+
+
+def test_sample_varies_with_seed():
+    topo = topology.build("fat-tree")
+    scens = {failures.sample(topo, "link1", s).cut_edges for s in range(16)}
+    assert len(scens) > 1, "all seeds drew the same link"
+
+
+# ---------------------------------------------------------------------------
+# degraded problems + warm-started re-solves
+# ---------------------------------------------------------------------------
+
+def test_degrade_problem_zeroes_unroutable_flows():
+    p = small_problem("spine-leaf")
+    # cut one server's only access link: its flows become unroutable
+    srv = int(p.coflow.src[0])
+    e = int(np.flatnonzero(p.topo.edges[:, 0] == srv)[0])
+    dst = int(p.topo.edges[e, 1])
+    groups = failures.link_groups(p.topo)
+    gid = next(i for i, g in enumerate(groups)
+               if set(np.unique(p.topo.edges[list(g)])) == {srv, dst})
+    dp = failures.degrade_problem(p, failures.cut_links(p.topo, [gid]))
+    touched = (p.coflow.src == srv) | (p.coflow.dst == srv)
+    assert (dp.coflow.size[touched] == 0.0).all()
+    assert np.array_equal(dp.coflow.size[~touched], p.coflow.size[~touched])
+    # the degraded instance still solves and stays exactly feasible
+    r = solver.solve_fast(dp, "energy", iters=2000)
+    assert r.metrics.feasible
+    assert r.metrics.served.sum() < p.coflow.total_gbits
+
+
+@pytest.mark.parametrize("objective", ["energy", "time"])
+def test_warm_resolve_matches_cold(objective):
+    """Warm-started incremental re-solve lands on a schedule equivalent to
+    a cold solve of the same degraded instance (both exactly feasible,
+    same delivered Gbits, primary metric within a small LP-multiplicity
+    band)."""
+    p = small_problem("spine-leaf")
+    healthy = solver.solve_fast(p, objective, iters=2000)
+    dp = failures.degrade_problem(p, failures.sample(p.topo, "link1", 0))
+    cold = solver.solve_fast(dp, objective, iters=2000)
+    warm = solver.resolve_incremental(dp, objective, healthy, iters=2000)
+    assert cold.metrics.feasible and warm.metrics.feasible
+    assert warm.metrics.served.sum() == pytest.approx(
+        cold.metrics.served.sum(), rel=1e-6)
+    key = "energy_j" if objective == "energy" else "completion_s"
+    assert getattr(warm.metrics, key) == pytest.approx(
+        getattr(cold.metrics, key), rel=0.05)
+
+
+def test_ensemble_warm_equals_cold_metrics():
+    p = small_problem("bcube")
+    healthy = solver.solve_fast(p, "energy", iters=2000)
+    dprobs = [failures.degrade_problem(p, failures.sample(p.topo, "link1", s))
+              for s in range(3)]
+    cold = solver.solve_fast_ensemble(dprobs, "energy", iters=2000)
+    warm = solver.solve_fast_ensemble(dprobs, "energy", warm=[healthy] * 3,
+                                      iters=2000)
+    for c, w in zip(cold, warm):
+        assert c.metrics.feasible and w.metrics.feasible
+        assert w.metrics.served.sum() == pytest.approx(
+            c.metrics.served.sum(), rel=1e-6)
+        assert w.metrics.energy_j == pytest.approx(c.metrics.energy_j,
+                                                   rel=0.05)
+
+
+def test_noop_scenario_projection_is_lossless():
+    """Projecting onto an identical (undegraded) instance must preserve the
+    decomposed routing volumes and duals exactly."""
+    p = small_problem("spine-leaf")
+    healthy = solver.solve_fast(p, "energy", iters=2000)
+    lp, idx = solver.build_routing_lp(p, "energy")
+    x0, y0 = solver.project_warm_start(healthy, p, lp, idx)
+    np.testing.assert_allclose(y0, healthy.lp_y, atol=1e-12)
+    served = sum(pp.volume for pp in healthy.paths)
+    assert x0[:len(idx.kf)].sum() > 0
+    # injection totals match the decomposed volumes per flow
+    F, W = p.coflow.n_flows, p.topo.n_wavelengths
+    inj = x0[len(idx.kf):len(idx.kf) + F * W].reshape(F, W).sum(axis=1)
+    per_flow = np.zeros(F)
+    for pp in healthy.paths:
+        per_flow[pp.flow] += pp.volume
+    np.testing.assert_allclose(inj, np.minimum(per_flow, p.coflow.size),
+                               atol=1e-9)
+    assert served == pytest.approx(inj.sum(), abs=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# sweep integration
+# ---------------------------------------------------------------------------
+
+def test_sweep_failures_axis(tmp_path):
+    from repro.sweep import SweepSpec, run_sweep, write_csv, write_markdown
+    spec = SweepSpec(topos=("spine-leaf",), objectives=("energy",),
+                     patterns=("uniform",), seeds=(0, 1),
+                     failures=("link1",), total_gbits=6.0, n_map=4,
+                     n_reduce=3, iters=1200, oracle_check=0)
+    records, problems = run_sweep(spec)
+    assert len(records) == len(problems) == 4          # 2 healthy + 2 degraded
+    degraded = [r for r in records if r.failure == "link1"]
+    assert len(degraded) == 2
+    for r in degraded:
+        assert r.feasible
+        assert 0.0 < r.degradation_ratio < 1.0
+        assert 0.0 < r.survivability <= 1.0 + 1e-9
+    csv_path = write_csv(records, tmp_path / "r.csv")
+    md = write_markdown(records, tmp_path / "r.md").read_text()
+    assert "failure" in csv_path.read_text().splitlines()[0]
+    assert "Degraded fabrics" in md
+
+
+@pytest.mark.parametrize("bad", ["meteor", "none"])
+def test_sweep_rejects_unknown_failure(bad):
+    """Unknown presets and the no-op "none" (whose records would be
+    misfiled as healthy rows) are both rejected up front."""
+    from repro.sweep import SweepSpec
+    spec = SweepSpec(topos=("spine-leaf",), failures=(bad,))
+    with pytest.raises(ValueError, match="failure preset"):
+        spec.validate()

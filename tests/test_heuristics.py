@@ -35,3 +35,77 @@ def test_sebf_at_least_as_good_as_fifo():
     m_fifo = timeslot.evaluate(p, heuristics.schedule(p, "fifo"))
     m_sebf = timeslot.evaluate(p, heuristics.schedule(p, "sebf"))
     assert m_sebf.completion_s <= m_fifo.completion_s + 1e-9
+
+
+def _shortest_paths_reference(p):
+    """The original list-based BFS (queue.pop(0), O(states^2)) — kept as
+    the behavioural reference for the deque rewrite: FIFO order, hence
+    the selected paths, must be bit-identical."""
+    from repro.core.solver import FlowPath, RoutingIndex, _admissible
+    kf, ke, kw = _admissible(p)
+    passive = ~(p.is_server | p.is_switch)
+    E, W = p.topo.n_edges, p.topo.n_wavelengths
+    out_edges = [[] for _ in range(p.topo.n_vertices)]
+    for e in range(E):
+        out_edges[int(p.e_src[e])].append(e)
+    k_of = {(int(kf[i]), int(ke[i]), int(kw[i])): i for i in range(len(kf))}
+    adm = {(int(kf[i]), int(ke[i]), int(kw[i])) for i in range(len(kf))}
+
+    paths = []
+    for f in range(p.coflow.n_flows):
+        src, dst = int(p.coflow.src[f]), int(p.coflow.dst[f])
+        start = (src, -1)
+        prev = {start: None}
+        queue = [start]
+        goal = None
+        while queue and goal is None:
+            u, w_in = queue.pop(0)
+            convert = (w_in == -1) or not passive[u]
+            for e in out_edges[u]:
+                for w in range(W):
+                    if not convert and w != w_in:
+                        continue
+                    if (f, e, w) not in adm:
+                        continue
+                    v = int(p.e_dst[e])
+                    state = (v, w)
+                    if state in prev:
+                        continue
+                    prev[state] = ((u, w_in), e, w)
+                    if v == dst:
+                        goal = state
+                        break
+                    queue.append(state)
+                if goal:
+                    break
+        if goal is None:
+            raise RuntimeError(f"flow {f}: no admissible path")
+        trail = []
+        st = goal
+        while prev[st] is not None:
+            pst, e, w = prev[st]
+            trail.append((e, w))
+            st = pst
+        trail.reverse()
+        triples = np.array([k_of[(f, e, w)] for e, w in trail], np.int64)
+        paths.append(FlowPath(f, triples, float(p.coflow.size[f]),
+                              int(trail[0][1])))
+    return RoutingIndex(kf, ke, kw, 0, 0), paths
+
+
+@pytest.mark.parametrize("name", ["spine-leaf", "fat-tree", "bcube", "pon3"])
+def test_bfs_deque_matches_reference(name):
+    """The deque BFS must pick the exact same shortest paths as the old
+    pop(0) implementation (same FIFO expansion order)."""
+    p = prob(name)
+    idx, paths = heuristics._shortest_paths(p)
+    ref_idx, ref_paths = _shortest_paths_reference(p)
+    np.testing.assert_array_equal(idx.kf, ref_idx.kf)
+    np.testing.assert_array_equal(idx.ke, ref_idx.ke)
+    np.testing.assert_array_equal(idx.kw, ref_idx.kw)
+    assert len(paths) == len(ref_paths)
+    for got, ref in zip(paths, ref_paths):
+        assert got.flow == ref.flow
+        np.testing.assert_array_equal(got.triples, ref.triples)
+        assert got.volume == ref.volume
+        assert got.tx_wavelength == ref.tx_wavelength

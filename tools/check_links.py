@@ -1,0 +1,85 @@
+#!/usr/bin/env python
+"""Fail on broken intra-repo markdown links.
+
+Scans every tracked *.md file for inline links/images `[text](target)`,
+resolves relative targets against the file's directory, and reports
+targets that do not exist (optionally checking `#anchors` against the
+destination file's headings).  External (`http[s]://`, `mailto:`) links
+are skipped — CI must not depend on the network.
+
+Run:  python tools/check_links.py [root]
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+# inline markdown link/image; ignores fenced code via a line-based scrub
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "ftp://")
+SKIP_DIRS = {".git", ".github", "__pycache__", ".pytest_cache"}
+
+
+def _anchor_ok(path: pathlib.Path, anchor: str) -> bool:
+    slugs = set()
+    in_fence = False
+    for line in path.read_text(encoding="utf-8").splitlines():
+        if line.lstrip().startswith("```"):
+            in_fence = not in_fence
+            continue
+        # only real headings count — a `# comment` inside a fenced code
+        # block must not satisfy an anchor
+        if not in_fence and line.startswith("#"):
+            text = line.lstrip("#").strip().lower()
+            slug = re.sub(r"[^\w\- ]", "", text).replace(" ", "-")
+            slugs.add(slug)
+    return anchor.lower() in slugs
+
+
+def check(root: pathlib.Path) -> tuple[list[str], int]:
+    errors = []
+    md_files = [p for p in sorted(root.rglob("*.md"))
+                if not (set(p.relative_to(root).parts[:-1]) & SKIP_DIRS)]
+    for md in md_files:
+        in_fence = False
+        for ln, line in enumerate(md.read_text(encoding="utf-8")
+                                  .splitlines(), 1):
+            if line.lstrip().startswith("```"):
+                in_fence = not in_fence
+                continue
+            if in_fence:
+                continue
+            for m in LINK_RE.finditer(line):
+                target = m.group(1)
+                if target.startswith(SKIP_PREFIXES):
+                    continue
+                path_part, _, anchor = target.partition("#")
+                if not path_part:          # same-file anchor
+                    if anchor and not _anchor_ok(md, anchor):
+                        errors.append(f"{md.relative_to(root)}:{ln}: "
+                                      f"missing anchor #{anchor}")
+                    continue
+                dest = (md.parent / path_part).resolve()
+                if not dest.exists():
+                    errors.append(f"{md.relative_to(root)}:{ln}: "
+                                  f"broken link -> {target}")
+                elif anchor and dest.suffix == ".md" \
+                        and not _anchor_ok(dest, anchor):
+                    errors.append(f"{md.relative_to(root)}:{ln}: "
+                                  f"missing anchor -> {target}")
+    return errors, len(md_files)
+
+
+def main() -> int:
+    root = pathlib.Path(sys.argv[1] if len(sys.argv) > 1 else ".").resolve()
+    errors, n_checked = check(root)
+    for e in errors:
+        print(e)
+    print(f"checked {n_checked} markdown files: "
+          f"{'OK' if not errors else f'{len(errors)} broken link(s)'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
