@@ -1,4 +1,5 @@
-"""Benchmark: cold vs warm-started failure-ensemble re-solves.
+"""Benchmark: cold vs warm-started failure-ensemble re-solves, per
+solver backend.
 
 A failure study multiplies the sweep grid: every healthy instance
 re-solves under each degraded fabric.  This benchmark measures that
@@ -13,14 +14,24 @@ inner loop both ways:
     row-by-row — core.solver.project_warm_start), so the fused adaptive
     dispatch freezes most members within one residual-check chunk.
 
+``--backends xla,pallas`` repeats every cell per PDHG lowering (COO
+scatters vs fused blocked-ELL Pallas bursts); the warm-start projection
+and freezing logic are backend-independent, so the warm-vs-cold ratio
+measures the same effect on either hot loop.  On CPU the Pallas kernels
+run in interpret mode — treat its wall times as a correctness/plumbing
+signal, not kernel throughput.
+
 Both sides run the same block-diagonal stacked dispatches to the same
 per-instance tolerance, and every schedule is verified feasible with the
 exact paper model before timings count.  An untimed cold pass populates
 the XLA compile cache first so neither side pays compilation; the gate
-applies to the aggregate warm-vs-cold speedup over all measured cells.
+applies to the aggregate warm-vs-cold speedup over all measured cells of
+the FIRST backend listed.
 
 Run:  PYTHONPATH=src python benchmarks/failure_bench.py [--seeds 8]
-Prints ``name,ms,derived`` CSV rows like the other benchmarks.
+Prints ``name,ms,derived`` CSV rows like the other benchmarks and
+merges machine-readable records into BENCH_solver.json at the repo root
+(schema: benchmarks/bench_json.py).
 """
 from __future__ import annotations
 
@@ -29,6 +40,10 @@ import time
 
 import numpy as np
 
+try:
+    import bench_json                      # script: python benchmarks/...
+except ImportError:                        # module: python -m benchmarks....
+    from benchmarks import bench_json
 from repro.core import failures, solver, timeslot, topology, traffic
 
 
@@ -59,44 +74,64 @@ def build_cell(topo_name: str, n_seeds: int, presets: list[str],
 
 
 def bench_cell(topo_name: str, objective: str, n_seeds: int,
-               presets: list[str], iters: int, tol: float, scale):
+               presets: list[str], iters: int, tol: float, scale,
+               backend: str, records: list[dict]):
     n_map, n_reduce, total = scale
     healthy_probs, degraded, origin = build_cell(
         topo_name, n_seeds, presets, n_map, n_reduce, total)
 
     t0 = time.perf_counter()
     healthy = solver.solve_fast_batch(healthy_probs, objective, iters=iters,
-                                      tol=tol)
+                                      tol=tol, backend=backend)
     t_healthy = time.perf_counter() - t0
     warm_pool = [healthy[i] for i in origin]
 
     # untimed passes populate the XLA compile cache for BOTH ladders (cold
     # and warm stack different straggler shapes, hence different kernels)
-    solver.solve_fast_ensemble(degraded, objective, iters=iters, tol=tol)
+    solver.solve_fast_ensemble(degraded, objective, iters=iters, tol=tol,
+                               backend=backend)
     solver.solve_fast_ensemble(degraded, objective, warm=warm_pool,
-                               iters=iters, tol=tol)
+                               iters=iters, tol=tol, backend=backend)
 
     t0 = time.perf_counter()
     cold = solver.solve_fast_ensemble(degraded, objective, iters=iters,
-                                      tol=tol)
+                                      tol=tol, backend=backend)
     t_cold = time.perf_counter() - t0
 
     t0 = time.perf_counter()
     warm = solver.solve_fast_ensemble(degraded, objective, warm=warm_pool,
-                                      iters=iters, tol=tol)
+                                      iters=iters, tol=tol, backend=backend)
     t_warm = time.perf_counter() - t0
 
     for r in cold + warm:
         assert r.metrics.feasible, topo_name
     it_cold = float(np.mean([r.iterations for r in cold]))
     it_warm = float(np.mean([r.iterations for r in warm]))
-    cell = f"{topo_name}/min-{objective}"
+    cell = f"{topo_name}/min-{objective}/{backend}"
     print(f"failure/{cell}/healthy,{t_healthy*1e3:.1f},"
           f"{n_seeds} seeds ({n_map}x{n_reduce} tasks, {total:g} Gbit)")
     print(f"failure/{cell}/cold,{t_cold*1e3:.1f},"
           f"{len(degraded)} degraded instances ({it_cold:.0f} iters/inst)")
     print(f"failure/{cell}/warm,{t_warm*1e3:.1f},"
           f"{t_cold/t_warm:.2f}x speedup ({it_warm:.0f} iters/inst)")
+    records += [
+        bench_json.record(
+            f"failure/{cell}/healthy", topology=topo_name,
+            objective=objective, backend=backend, wall_ms=t_healthy * 1e3,
+            iterations=float(np.mean([r.iterations for r in healthy])),
+            derived=f"{n_seeds} seeds ({n_map}x{n_reduce} tasks, "
+                    f"{total:g} Gbit)"),
+        bench_json.record(
+            f"failure/{cell}/cold", topology=topo_name,
+            objective=objective, backend=backend, wall_ms=t_cold * 1e3,
+            iterations=it_cold,
+            derived=f"{len(degraded)} degraded instances"),
+        bench_json.record(
+            f"failure/{cell}/warm", topology=topo_name,
+            objective=objective, backend=backend, wall_ms=t_warm * 1e3,
+            iterations=it_warm,
+            derived=f"{t_cold/t_warm:.2f}x speedup vs cold"),
+    ]
     return t_cold, t_warm
 
 
@@ -109,30 +144,45 @@ def main(argv=None) -> int:
                          "re-scored exactly regardless)")
     ap.add_argument("--topos", default="bcube,dcell,pon3")
     ap.add_argument("--objectives", default="energy,time")
+    ap.add_argument("--backends", default="xla,pallas",
+                    help="comma list of PDHG lowerings to compare "
+                         f"({','.join(solver.BACKENDS)}); the speedup "
+                         "gate applies to the first one")
     ap.add_argument("--failures", default="link1,link3,switch,degrade50")
     ap.add_argument("--n-map", type=int, default=4)
     ap.add_argument("--n-reduce", type=int, default=3)
     ap.add_argument("--total-gbits", type=float, default=8.0)
     ap.add_argument("--min-speedup", type=float, default=1.15,
-                    help="gate on the aggregate warm-vs-cold speedup")
+                    help="gate on the first backend's aggregate "
+                         "warm-vs-cold speedup")
+    ap.add_argument("--json-out", default=str(bench_json.DEFAULT_PATH),
+                    help="BENCH_solver.json to merge records into "
+                         "('' disables)")
     args = ap.parse_args(argv)
     scale = (args.n_map, args.n_reduce, args.total_gbits)
     presets = args.failures.split(",")
-    sum_cold = sum_warm = 0.0
-    for t in args.topos.split(","):
-        for obj in args.objectives.split(","):
-            tc, tw = bench_cell(t, obj, args.seeds, presets, args.iters,
-                                args.tol, scale)
-            sum_cold += tc
-            sum_warm += tw
-    agg = sum_cold / sum_warm
-    print(f"failure/aggregate,{sum_warm*1e3:.1f},{agg:.2f}x speedup "
-          f"(cold total {sum_cold*1e3:.1f} ms)")
-    if agg < args.min_speedup:
-        print(f"FAIL: aggregate speedup {agg:.2f}x < {args.min_speedup}x")
-        return 1
-    print(f"OK: aggregate speedup {agg:.2f}x >= {args.min_speedup}x")
-    return 0
+    backends = bench_json.parse_backends(ap, args.backends)
+    records: list[dict] = []
+    agg: dict[str, tuple[float, float]] = {}
+    for backend in backends:
+        sum_cold = sum_warm = 0.0
+        for t in args.topos.split(","):
+            for obj in args.objectives.split(","):
+                tc, tw = bench_cell(t, obj, args.seeds, presets, args.iters,
+                                    args.tol, scale, backend, records)
+                sum_cold += tc
+                sum_warm += tw
+        agg[backend] = (sum_cold, sum_warm)
+    return bench_json.finish_comparison(
+        "failure_bench", "failure", backends, agg, records,
+        total_label="cold total", speed_label="warm-vs-cold speedup",
+        ratio_label="warm time", json_out=args.json_out,
+        min_speedup=args.min_speedup,
+        run_args={"seeds": args.seeds, "iters": args.iters, "tol": args.tol,
+                  "topos": args.topos, "objectives": args.objectives,
+                  "backends": args.backends, "failures": args.failures,
+                  "n_map": args.n_map, "n_reduce": args.n_reduce,
+                  "total_gbits": args.total_gbits})
 
 
 if __name__ == "__main__":

@@ -1,4 +1,5 @@
-"""Benchmark: the batched sweep engine vs a per-instance Python loop.
+"""Benchmark: the batched sweep engine vs a per-instance Python loop,
+per solver backend.
 
 Measures sweep grid cells end-to-end, both ways:
 
@@ -13,10 +14,17 @@ Measures sweep grid cells end-to-end, both ways:
     500 iterations, converged instances freeze), with stragglers
     re-stacked into narrower dispatches instead of dragging the batch.
 
+``--backends xla,pallas`` repeats every cell per PDHG lowering (COO
+scatters vs fused blocked-ELL Pallas bursts, see docs/SOLVER.md
+"Backends") so the two hot loops are compared on identical work; on CPU
+the Pallas kernels run in interpret mode, so treat its wall times as a
+correctness/plumbing signal, not kernel throughput.
+
 Both sides solve to the same per-instance tolerance, include XLA
 compilation (the wall time a fresh sweep cell pays), and every schedule
 is verified feasible with the exact paper model before timings count.
-The gate applies to the aggregate speedup over all measured cells.
+The speedup gate applies to the aggregate over all cells of the FIRST
+backend listed (the deployment default).
 
 The win is largest where the sweep lives — many small/medium LPs per
 cell (bcube/dcell/PON rack cells: ~3-5x).  On topologies whose single
@@ -25,13 +33,21 @@ spine-leaf at paper scale) the engine approaches parity (~1.6-2.3x);
 run ``--topos fat-tree,spine-leaf`` to measure that regime.
 
 Run:  PYTHONPATH=src python benchmarks/sweep_bench.py [--seeds 16]
-Prints ``name,ms,derived`` CSV rows like the other benchmarks.
+Prints ``name,ms,derived`` CSV rows like the other benchmarks and
+merges machine-readable records into BENCH_solver.json at the repo root
+(schema: benchmarks/bench_json.py).
 """
 from __future__ import annotations
 
 import argparse
 import time
 
+import numpy as np
+
+try:
+    import bench_json                      # script: python benchmarks/...
+except ImportError:                        # module: python -m benchmarks....
+    from benchmarks import bench_json
 from repro.core import solver, timeslot, topology, traffic
 
 
@@ -47,27 +63,43 @@ def build_problems(topo_name: str, n_seeds: int, pat_name: str,
 
 
 def bench_cell(topo_name: str, objective: str, pat_name: str, n_seeds: int,
-               iters: int, tol: float, scale: tuple[int, int, float]):
+               iters: int, tol: float, scale: tuple[int, int, float],
+               backend: str, records: list[dict]):
     n_map, n_reduce, total = scale
     probs = build_problems(topo_name, n_seeds, pat_name, n_map, n_reduce,
                            total)
 
     t0 = time.perf_counter()
-    loop = [solver.solve_fast(p, objective, iters=iters, tol=tol)
+    loop = [solver.solve_fast(p, objective, iters=iters, tol=tol,
+                              backend=backend)
             for p in probs]
     t_loop = time.perf_counter() - t0
 
     t0 = time.perf_counter()
-    batch = solver.solve_fast_batch(probs, objective, iters=iters, tol=tol)
+    batch = solver.solve_fast_batch(probs, objective, iters=iters, tol=tol,
+                                    backend=backend)
     t_batch = time.perf_counter() - t0
 
     for r in loop + batch:
         assert r.metrics.feasible and r.remaining_gbits < 1e-6, topo_name
-    cell = f"{topo_name}/{pat_name}/min-{objective}"
+    cell = f"{topo_name}/{pat_name}/min-{objective}/{backend}"
+    it_mean = float(np.mean([r.iterations for r in batch]))
     print(f"sweep/{cell}/loop,{t_loop*1e3:.1f},"
           f"{n_seeds} seeds ({n_map}x{n_reduce} tasks, {total:g} Gbit)")
     print(f"sweep/{cell}/batch,{t_batch*1e3:.1f},"
           f"{t_loop/t_batch:.2f}x speedup")
+    records += [
+        bench_json.record(
+            f"sweep/{cell}/loop", topology=topo_name, objective=objective,
+            backend=backend, wall_ms=t_loop * 1e3,
+            iterations=float(np.mean([r.iterations for r in loop])),
+            derived=f"{n_seeds} seeds ({n_map}x{n_reduce} tasks, "
+                    f"{total:g} Gbit)"),
+        bench_json.record(
+            f"sweep/{cell}/batch", topology=topo_name, objective=objective,
+            backend=backend, wall_ms=t_batch * 1e3, iterations=it_mean,
+            derived=f"{t_loop/t_batch:.2f}x speedup vs loop"),
+    ]
     return t_loop, t_batch
 
 
@@ -80,29 +112,45 @@ def main(argv=None) -> int:
                          "re-scored exactly regardless)")
     ap.add_argument("--topos", default="bcube,dcell,pon3")
     ap.add_argument("--objectives", default="energy,time")
+    ap.add_argument("--backends", default="xla,pallas",
+                    help="comma list of PDHG lowerings to compare "
+                         f"({','.join(solver.BACKENDS)}); the speedup "
+                         "gate applies to the first one")
     ap.add_argument("--pattern", default="uniform")
     ap.add_argument("--n-map", type=int, default=4)
     ap.add_argument("--n-reduce", type=int, default=3)
     ap.add_argument("--total-gbits", type=float, default=8.0)
     ap.add_argument("--min-speedup", type=float, default=3.0,
-                    help="gate on the aggregate speedup over all cells")
+                    help="gate on the first backend's aggregate speedup "
+                         "over all cells")
+    ap.add_argument("--json-out", default=str(bench_json.DEFAULT_PATH),
+                    help="BENCH_solver.json to merge records into "
+                         "('' disables)")
     args = ap.parse_args(argv)
     scale = (args.n_map, args.n_reduce, args.total_gbits)
-    sum_loop = sum_batch = 0.0
-    for t in args.topos.split(","):
-        for obj in args.objectives.split(","):
-            tl, tb = bench_cell(t, obj, args.pattern, args.seeds,
-                                args.iters, args.tol, scale)
-            sum_loop += tl
-            sum_batch += tb
-    agg = sum_loop / sum_batch
-    print(f"sweep/aggregate,{sum_batch*1e3:.1f},{agg:.2f}x speedup "
-          f"(loop total {sum_loop*1e3:.1f} ms)")
-    if agg < args.min_speedup:
-        print(f"FAIL: aggregate speedup {agg:.2f}x < {args.min_speedup}x")
-        return 1
-    print(f"OK: aggregate speedup {agg:.2f}x >= {args.min_speedup}x")
-    return 0
+    backends = bench_json.parse_backends(ap, args.backends)
+    records: list[dict] = []
+    agg: dict[str, tuple[float, float]] = {}
+    for backend in backends:
+        sum_loop = sum_batch = 0.0
+        for t in args.topos.split(","):
+            for obj in args.objectives.split(","):
+                tl, tb = bench_cell(t, obj, args.pattern, args.seeds,
+                                    args.iters, args.tol, scale, backend,
+                                    records)
+                sum_loop += tl
+                sum_batch += tb
+        agg[backend] = (sum_loop, sum_batch)
+    return bench_json.finish_comparison(
+        "sweep_bench", "sweep", backends, agg, records,
+        total_label="loop total", speed_label="speedup vs per-instance loop",
+        ratio_label="batch time", json_out=args.json_out,
+        min_speedup=args.min_speedup,
+        run_args={"seeds": args.seeds, "iters": args.iters, "tol": args.tol,
+                  "topos": args.topos, "objectives": args.objectives,
+                  "backends": args.backends, "pattern": args.pattern,
+                  "n_map": args.n_map, "n_reduce": args.n_reduce,
+                  "total_gbits": args.total_gbits})
 
 
 if __name__ == "__main__":

@@ -27,16 +27,29 @@ from .timeslot import ScheduleProblem, evaluate
 from .topology import KIND_SERVER, KIND_SWITCH, Device, Topology
 from .traffic import CoflowSet
 
-# TPU v5e constants (per chip)
+# TPU v5e constants (per chip).  Bandwidths feed Topology.cap — the
+# "Gbps" of paper eq. (28) becomes GB/s in this domain, and flow sizes
+# are GB, so cap * slot_duration is GB shipped per slot, dimensionally
+# identical to the DCN side.  The power constants play the role the
+# Table II device powers play in the paper's energy model: they enter
+# Device.p_max and are billed by core.timeslot.evaluate as the
+# per-active-device ON power of eqs. (19)-(21), integrated over active
+# slots into Joules by eq. (22).  They are *modelling* constants for
+# the scheduler's energy objective (marginal interconnect power of an
+# active axis), not a measured v5e power spec.
 ICI_GBPS_PER_LINK = 50.0          # GB/s per ICI link per direction
 DCI_GBPS_PER_POD = 25.0           # GB/s inter-pod share per chip (model)
-P_ICI_LINK_W = 1.5                # W per active ICI link (energy *model*)
-P_DCI_LINK_W = 3.0
+P_ICI_LINK_W = 1.5                # W while an ICI axis is active (eq. 21)
+P_DCI_LINK_W = 3.0                # W while the DCI "pod" axis is active
 
 
 @dataclasses.dataclass(frozen=True)
 class FabricSpec:
-    """One scheduling domain: the collective channels visible to a step."""
+    """One scheduling domain: the collective channels visible to a step.
+
+    Units: `axis_bw` in GB/s per chip, `slot_duration` in seconds — the
+    derived Topology therefore ships `axis_bw * slot_duration` GB per
+    slot per axis (the eq. 28 capacity bound with Gbit->GB relabeled)."""
 
     axis_names: tuple[str, ...]            # e.g. ("data", "model", "pod")
     axis_sizes: tuple[int, ...]            # ring lengths
@@ -62,10 +75,14 @@ def fabric_topology(spec: FabricSpec) -> Topology:
     """Axis-channel graph: src -> per-axis channel -> sink.
 
     Each independent ICI axis is one "switch" vertex whose ingress/egress
-    capacity is the per-chip axis bandwidth; a co-flow (collective) routed
-    through axis a consumes that axis for its bytes-on-wire volume.  This
-    is the fixed-routing contraction of the paper's arbitrary-graph model:
-    path choice collapses to axis choice (see DESIGN.md §2)."""
+    capacity is the per-chip axis bandwidth (GB/s); a co-flow (collective)
+    routed through axis a consumes that axis for its bytes-on-wire volume.
+    This is the fixed-routing contraction of the paper's arbitrary-graph
+    model: path choice collapses to axis choice.  The axis vertices carry
+    `P_ICI_LINK_W`/`P_DCI_LINK_W` as their `Device.p_max`, so
+    core.timeslot.evaluate bills an active axis exactly like an active
+    switch under eqs. (19)-(22): p_max Watts for every slot in which any
+    traffic crosses it, times the slot duration, summed into Joules."""
     devices = [Device("grads", KIND_SERVER, 0.0)]
     edges, caps = [], []
     src = 0
@@ -103,7 +120,13 @@ class Bucket:
 
 @dataclasses.dataclass
 class SlotPlan:
-    """Executable plan: per bucket, the slot -> axis-share mapping."""
+    """Executable plan: per bucket, the slot -> axis-share mapping.
+
+    `completion_s` (seconds) and `energy_j` (Joules) are exact
+    core.timeslot.evaluate numbers for the packed schedule — the
+    completion-time accounting of eqs. (39)-(45) and the activity-power
+    energy of eqs. (19)-(22) applied to the fabric graph — never LP
+    estimates."""
 
     buckets: list[Bucket]
     # share[b, a, t]: fraction of bucket b's bytes sent on axis a in slot t

@@ -96,7 +96,14 @@ def _pdhg_ops(c, row, col, val, b, h, m, n, m_eq):
     (tau_j = 1/sum_i |K_ij|, sig_i = 1/sum_j |K_ij|), the sparse operator
     pair (Kx, KTy), and the inequality-row mask.  Single source of truth
     for both the resumable kernel and the fused adaptive batch kernel —
-    their trajectories must stay identical."""
+    their trajectories must stay identical.
+
+    The pallas backend mirrors these formulas: _pack_pallas
+    (preconditioners/q/ub mask, numpy) and the shared update body
+    kernels/pdhg_spmv.py::pdhg_update_burst (used by both the kernel
+    and its ref.py oracle).  Any change here must be replicated there,
+    or the backend-equivalence tests (tests/test_pdhg_kernels.py) will
+    drift apart."""
     q = jnp.concatenate([b, h])
     abs_val = jnp.abs(val)
     col_sum = jnp.zeros(n).at[col].add(abs_val)
@@ -153,6 +160,100 @@ def _pdhg_run(c, row, col, val, b, h, xmax, m, n, m_eq, iters, check_every):
 
 _pdhg_resume = functools.partial(jax.jit, static_argnames=(
     "m", "n", "m_eq", "iters"))(_pdhg_kernel_state)
+
+
+# ---------------------------------------------------------------------------
+# Pallas backend: the same PDHG update over a blocked-ELL operator
+# ---------------------------------------------------------------------------
+#
+# backend="xla" (default) runs the COO scatter kernels above, bit-for-bit
+# unchanged.  backend="pallas" re-packs the operator into the blocked-ELL
+# layout of repro.kernels.pdhg_spmv and runs whole iteration bursts as one
+# fused Pallas kernel (K^T.y gather, prox/clip, K.x, dual ascent, terminal
+# residuals) — validated on CPU via interpret=True, lowering to Mosaic on
+# TPU.  Same math, same freeze semantics; only the SpMV reduction order
+# differs, so results agree to fp tolerance, not bitwise (see
+# docs/SOLVER.md "Backends" and docs/KERNELS.md).
+
+BACKENDS = ("xla", "pallas")
+
+
+def _check_backend(backend: str) -> None:
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown solver backend {backend!r}; "
+                         f"have {BACKENDS}")
+
+
+def _pack_pallas(c, row, col, val, b, h, xmax, m_eq):
+    """Pack one (already max-normalized, xmax-clamped) LP for the Pallas
+    kernels: blocked-ELL tables for both SpMV directions plus the
+    storage-padded vector arguments.  Padded x-slots carry tau=c=xmax=0
+    and padded y-slots sig=q=0, so they stay pinned at zero through any
+    number of iterations.
+
+    The tau/sig/q/ub formulas are a numpy mirror of _pdhg_ops (which
+    builds them in-trace from the COO arrays) — keep the two in
+    lockstep."""
+    from repro.kernels import pdhg_spmv
+
+    n, m = len(c), len(b) + len(h)
+    op = pdhg_spmv.ell_pack(row, col, val, m, n)
+    q = np.concatenate([b, h])
+    abs_val = np.abs(val)
+    col_sum = np.zeros(n)
+    np.add.at(col_sum, col, abs_val)
+    row_sum = np.zeros(m)
+    np.add.at(row_sum, row, abs_val)
+    tau = 1.0 / np.maximum(col_sum, 1e-12)
+    sig = 1.0 / np.maximum(row_sum, 1e-12)
+    ub = np.arange(m) >= m_eq
+
+    def padn(a):
+        return jnp.asarray(np.pad(np.asarray(a, np.float32),
+                                  (0, op.n_pad - n)))
+
+    def padm(a):
+        return jnp.asarray(np.pad(np.asarray(a, np.float32),
+                                  (0, op.m_pad - m)))
+
+    vecs = (padn(c), padn(tau), padn(xmax), padm(q), padm(sig),
+            jnp.asarray(np.pad(ub, (0, op.m_pad - m), constant_values=True)))
+    ell = tuple(jnp.asarray(a) for a in (op.rows.idx, op.rows.val,
+                                         op.cols.idx, op.cols.val))
+    return op, vecs, ell
+
+
+def _solve_lp_pallas(lp: StructuredLP, iters: int, tol: float,
+                     max_restarts: int, x0, y0) -> PDHGResult:
+    """solve_lp's restart ladder with each rung one fused Pallas burst."""
+    from repro.kernels import ops as kops
+
+    xmax = np.where(np.isfinite(lp.xmax), lp.xmax, 1e12)
+    cscale = max(float(np.abs(lp.c).max(initial=0.0)), 1e-12)
+    op, vecs, ell = _pack_pallas(lp.c / cscale, lp.row, lp.col, lp.val,
+                                 lp.b, lp.h, xmax, lp.m_eq)
+    keep_n = jnp.zeros(op.n_pad, bool)
+    keep_m = jnp.zeros(op.m_pad, bool)
+    x = jnp.zeros(op.n_pad) if x0 is None else jnp.asarray(
+        np.pad(np.asarray(x0, np.float32), (0, op.n_pad - lp.n)))
+    y = jnp.zeros(op.m_pad) if y0 is None else jnp.asarray(
+        np.pad(np.asarray(y0, np.float32), (0, op.m_pad - lp.m)))
+    total_iters = 0
+    for attempt in range(max_restarts + 1):
+        x, y, worst = kops.pdhg_burst(
+            *vecs, keep_n, keep_m, *ell, x, y,
+            row_meta=op.rows.meta, col_meta=op.cols.meta, iters=iters)
+        total_iters += iters
+        primal = float(jnp.max(worst))        # padded rows contribute 0
+        if primal <= tol:
+            break
+        iters *= 2
+    x_np = np.asarray(x)[:lp.n].astype(np.float64)
+    y_np = np.asarray(y)[:lp.m].astype(np.float64)
+    obj = float(lp.c @ x_np) / cscale
+    gap = abs(obj + float(np.concatenate([lp.b, lp.h]) @ y_np)) \
+        / (1.0 + abs(obj))
+    return PDHGResult(x_np, primal, gap, total_iters, y=y_np)
 
 
 @functools.partial(jax.jit, static_argnames=(
@@ -231,17 +332,26 @@ def _pdhg_run_batch(c, row, col, val, b, h, xmax, x0, y0, m, n, m_eq, iters):
 def solve_lp(lp: StructuredLP, iters: int = 4000, *,
              tol: float | None = None, max_restarts: int = 3,
              x0: np.ndarray | None = None,
-             y0: np.ndarray | None = None) -> PDHGResult:
+             y0: np.ndarray | None = None,
+             backend: str = "xla") -> PDHGResult:
     """Solve with PDHG; objective is max-normalized (the schedule is re-scored
     exactly afterwards, so only the argmin matters).  If the primal residual
     exceeds `tol`, continue the trajectory with doubled iterations (warm
     restart — prior progress is never discarded).  `x0`/`y0` seed the
     primal/dual iterates (e.g. a projected healthy solution for a degraded
-    re-solve, see project_warm_start); default is a cold start from zero."""
-    xmax = np.where(np.isfinite(lp.xmax), lp.xmax, 1e12)
-    cscale = max(float(np.abs(lp.c).max(initial=0.0)), 1e-12)
+    re-solve, see project_warm_start); default is a cold start from zero.
+
+    `backend` selects the PDHG lowering: "xla" (default, COO scatters,
+    bit-for-bit the historical trajectory) or "pallas" (fused blocked-ELL
+    bursts via repro.kernels.pdhg_spmv; same math, fp-level differences
+    only — see docs/SOLVER.md "Backends")."""
+    _check_backend(backend)
     if tol is None:
         tol = 1e-4 * max(float(np.abs(lp.b).max(initial=0.0)), 1.0)
+    if backend == "pallas":
+        return _solve_lp_pallas(lp, iters, tol, max_restarts, x0, y0)
+    xmax = np.where(np.isfinite(lp.xmax), lp.xmax, 1e12)
+    cscale = max(float(np.abs(lp.c).max(initial=0.0)), 1e-12)
     args = (jnp.asarray(lp.c / cscale), jnp.asarray(lp.row),
             jnp.asarray(lp.col), jnp.asarray(lp.val), jnp.asarray(lp.b),
             jnp.asarray(lp.h), jnp.asarray(xmax))
@@ -714,7 +824,8 @@ def _assemble_fast_result(p: ScheduleProblem, lp: StructuredLP,
 
 
 def solve_fast(p: ScheduleProblem, objective: str = "energy", *,
-               iters: int = 4000, tol: float | None = None) -> FastPathResult:
+               iters: int = 4000, tol: float | None = None,
+               backend: str = "xla") -> FastPathResult:
     """Single-instance fast path: routing LP -> PDHG -> slot packing ->
     exact re-scoring.
 
@@ -725,15 +836,19 @@ def solve_fast(p: ScheduleProblem, objective: str = "energy", *,
       iters: PDHG iterations per restart rung (doubled on each restart,
         up to solve_lp's max_restarts).
       tol: primal-residual target in Gbits; default 1e-4 * max demand.
+      backend: PDHG lowering, "xla" (default) or "pallas" (fused
+        blocked-ELL bursts; see docs/SOLVER.md "Backends").
 
     Returns a FastPathResult whose `metrics` are always the exact paper
     equations evaluated on the packed schedule — never LP estimates.
 
     Determinism: bitwise-reproducible for a fixed (jax version, platform,
-    precision config); there is no RNG anywhere in the fast path, so
-    repeated calls with equal inputs return identical schedules."""
+    precision config, backend); there is no RNG anywhere in the fast
+    path, so repeated calls with equal inputs return identical
+    schedules.  The two backends agree to fp tolerance (~1e-4 relative
+    on metrics), not bitwise."""
     lp, idx = build_routing_lp(p, objective)
-    res = solve_lp(lp, iters=iters, tol=tol)
+    res = solve_lp(lp, iters=iters, tol=tol, backend=backend)
     return _assemble_fast_result(p, lp, idx, res)
 
 
@@ -862,7 +977,7 @@ def solve_lp_batch(lps: list[StructuredLP], iters: int = 4000, *,
                    tol: float | None = None, max_restarts: int = 3,
                    adaptive: bool = True, chunk: int = 500,
                    warm_starts: list[tuple[np.ndarray, np.ndarray]] | None
-                   = None) -> list[PDHGResult]:
+                   = None, backend: str = "xla") -> list[PDHGResult]:
     """Solve a batch of LPs over the instance axis in one jitted PDHG
     dispatch (block-diagonal stacking; see BlockStackedLP for why this
     beats a literal vmap on CPU).
@@ -887,21 +1002,59 @@ def solve_lp_batch(lps: list[StructuredLP], iters: int = 4000, *,
 
     Determinism: no RNG; results are reproducible for fixed inputs and
     jax build, and independent of batch composition up to the float
-    reduction order of the stacked scatters."""
+    reduction order of the stacked scatters.
+
+    `backend="pallas"` runs every dispatch as fused blocked-ELL Pallas
+    bursts (repro.kernels.pdhg_spmv) instead of COO scatters — identical
+    escalation/freezing semantics, fp-level trajectory differences only;
+    the default "xla" path is untouched."""
+    _check_backend(backend)
     B = len(lps)
     all_tols = np.array([tol if tol is not None
                          else 1e-4 * max(float(np.abs(lp.b).max(initial=0.0)),
                                          1.0)
                          for lp in lps])
 
+    def _run_pallas(g: StructuredLP, bs: BlockStackedLP, x0, y0,
+                    sub: list[int], budget: int):
+        """The stacked dispatch lowered through the Pallas kernels: pack
+        the stacked LP into blocked-ELL once per dispatch shape, then run
+        the fused adaptive loop (or one fixed burst) via repro.kernels."""
+        from repro.kernels import ops as kops
+
+        op, vecs, ell = _pack_pallas(g.c, g.row, g.col, g.val, g.b, g.h,
+                                     g.xmax, g.m_eq)
+        x0p = jnp.pad(x0.astype(jnp.float32), (0, op.n_pad - g.n))
+        y0p = jnp.pad(y0.astype(jnp.float32), (0, op.m_pad - g.m))
+        if adaptive:
+            # storage coordinate -> instance id; padded slots go to the
+            # dump segment len(sub) (always treated as frozen/converged)
+            inst_n = np.full(op.n_pad, len(sub), np.int32)
+            inst_n[:g.n] = np.repeat(np.arange(len(sub)), np.diff(bs.n_off))
+            inst_m = np.full(op.m_pad, len(sub), np.int32)
+            inst_m[:g.m] = np.concatenate(
+                [np.repeat(np.arange(len(sub)), np.diff(bs.eq_off)),
+                 np.repeat(np.arange(len(sub)), np.diff(bs.ub_off))])
+            x, y, _, used_chunks = kops.pdhg_adaptive(
+                *vecs, *ell, x0p, y0p, jnp.asarray(all_tols[sub]),
+                jnp.asarray(inst_n), jnp.asarray(inst_m),
+                num_inst=len(sub), row_meta=op.rows.meta,
+                col_meta=op.cols.meta, chunk=chunk,
+                max_chunks=budget // chunk)
+            used = np.asarray(used_chunks) * chunk
+        else:
+            x, y, _ = kops.pdhg_burst(
+                *vecs, jnp.zeros(op.n_pad, bool), jnp.zeros(op.m_pad, bool),
+                *ell, x0p, y0p, row_meta=op.rows.meta,
+                col_meta=op.cols.meta, iters=budget)
+            used = np.full(len(sub), budget)
+        return x, y, used
+
     def _run(sub: list[int], states, budget: int):
         """One stacked dispatch over the instances in `sub`; returns
         (x, y, residuals, iterations) split per instance."""
         bs = block_stack([lps[i] for i in sub])
         g = bs.lp
-        args = (jnp.asarray(g.c), jnp.asarray(g.row), jnp.asarray(g.col),
-                jnp.asarray(g.val), jnp.asarray(g.b), jnp.asarray(g.h),
-                jnp.asarray(g.xmax))
         if states is None:
             x0, y0 = jnp.zeros(g.n), jnp.zeros(g.m)
         else:
@@ -909,21 +1062,27 @@ def solve_lp_batch(lps: list[StructuredLP], iters: int = 4000, *,
             y0 = jnp.asarray(np.concatenate(
                 [states[i][1][:lps[i].m_eq] for i in sub]
                 + [states[i][1][lps[i].m_eq:] for i in sub]))
-        if adaptive:
-            inst_n = np.repeat(np.arange(len(sub)), np.diff(bs.n_off))
-            inst_m = np.concatenate(
-                [np.repeat(np.arange(len(sub)), np.diff(bs.eq_off)),
-                 np.repeat(np.arange(len(sub)), np.diff(bs.ub_off))])
-            x, y, _, used_chunks = _pdhg_run_adaptive(
-                *args, x0, y0, jnp.asarray(all_tols[sub]),
-                jnp.asarray(inst_n), jnp.asarray(inst_m), len(sub),
-                g.m, g.n, g.m_eq, chunk, budget // chunk)
-            used = np.asarray(used_chunks) * chunk
+        if backend == "pallas":
+            x, y, used = _run_pallas(g, bs, x0, y0, sub, budget)
         else:
-            x, y, _, _ = _pdhg_resume(*args, x0, y0, g.m, g.n, g.m_eq,
-                                      budget)
-            used = np.full(len(sub), budget)
-        x_np, y_np = np.asarray(x), np.asarray(y)
+            args = (jnp.asarray(g.c), jnp.asarray(g.row), jnp.asarray(g.col),
+                    jnp.asarray(g.val), jnp.asarray(g.b), jnp.asarray(g.h),
+                    jnp.asarray(g.xmax))
+            if adaptive:
+                inst_n = np.repeat(np.arange(len(sub)), np.diff(bs.n_off))
+                inst_m = np.concatenate(
+                    [np.repeat(np.arange(len(sub)), np.diff(bs.eq_off)),
+                     np.repeat(np.arange(len(sub)), np.diff(bs.ub_off))])
+                x, y, _, used_chunks = _pdhg_run_adaptive(
+                    *args, x0, y0, jnp.asarray(all_tols[sub]),
+                    jnp.asarray(inst_n), jnp.asarray(inst_m), len(sub),
+                    g.m, g.n, g.m_eq, chunk, budget // chunk)
+                used = np.asarray(used_chunks) * chunk
+            else:
+                x, y, _, _ = _pdhg_resume(*args, x0, y0, g.m, g.n, g.m_eq,
+                                          budget)
+                used = np.full(len(sub), budget)
+        x_np, y_np = np.asarray(x)[:g.n], np.asarray(y)[:g.m]
         res = _per_instance_residuals(bs, x_np)
         outs = {}
         for j, i in enumerate(sub):
@@ -993,7 +1152,8 @@ def solve_lp_batch(lps: list[StructuredLP], iters: int = 4000, *,
 def solve_fast_batch(problems: list[ScheduleProblem],
                      objective: str = "energy", *,
                      iters: int = 4000, tol: float | None = None,
-                     adaptive: bool = True) -> list[FastPathResult]:
+                     adaptive: bool = True,
+                     backend: str = "xla") -> list[FastPathResult]:
     """Batched fast path over ScheduleProblems sharing one topology.
 
     The routing LPs (which differ per instance through task placement and
@@ -1020,7 +1180,7 @@ def solve_fast_batch(problems: list[ScheduleProblem],
             raise ValueError("solve_fast_batch requires a shared topology "
                              f"structure; got {t0.name} and {t.name}")
     return solve_fast_ensemble(problems, objective, iters=iters, tol=tol,
-                               adaptive=adaptive, chunk=500)
+                               adaptive=adaptive, chunk=500, backend=backend)
 
 
 # ---------------------------------------------------------------------------
@@ -1146,7 +1306,8 @@ def project_warm_start(warm: FastPathResult, p_dst: ScheduleProblem,
 
 def resolve_incremental(p: ScheduleProblem, objective: str,
                         warm: FastPathResult, *, iters: int = 4000,
-                        tol: float | None = None) -> FastPathResult:
+                        tol: float | None = None,
+                        backend: str = "xla") -> FastPathResult:
     """Re-solve a degraded instance starting from a healthy solution.
 
     `p` is the degraded problem (same coflow/flow indexing as the healthy
@@ -1158,7 +1319,7 @@ def resolve_incremental(p: ScheduleProblem, objective: str,
     itself warm-start further re-solves (cascading failures)."""
     lp, idx = build_routing_lp(p, objective)
     x0, y0 = project_warm_start(warm, p, lp, idx)
-    res = solve_lp(lp, iters=iters, tol=tol, x0=x0, y0=y0)
+    res = solve_lp(lp, iters=iters, tol=tol, x0=x0, y0=y0, backend=backend)
     return _assemble_fast_result(p, lp, idx, res)
 
 
@@ -1166,8 +1327,8 @@ def solve_fast_ensemble(problems: list[ScheduleProblem],
                         objective: str = "energy", *,
                         warm: list[FastPathResult] | None = None,
                         iters: int = 4000, tol: float | None = None,
-                        adaptive: bool = True,
-                        chunk: int | None = None) -> list[FastPathResult]:
+                        adaptive: bool = True, chunk: int | None = None,
+                        backend: str = "xla") -> list[FastPathResult]:
     """Batched fast path over a (possibly heterogeneous) instance list.
 
     Unlike solve_fast_batch this does not require a shared topology —
@@ -1194,6 +1355,7 @@ def solve_fast_ensemble(problems: list[ScheduleProblem],
         # iterations outweigh the extra on-device segment-max checks
         chunk = 250 if warm_starts is not None else 500
     results = solve_lp_batch(lps, iters=iters, tol=tol, adaptive=adaptive,
-                             chunk=chunk, warm_starts=warm_starts)
+                             chunk=chunk, warm_starts=warm_starts,
+                             backend=backend)
     return [_assemble_fast_result(p, lp, idx, res)
             for p, (lp, idx), res in zip(problems, built, results)]

@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from . import flash_attention as fa
+from . import pdhg_spmv as ps
 from . import rglru_scan as rs
 
 
@@ -53,3 +54,81 @@ def rglru(a, b, h0=None, *, interpret: bool | None = None):
     if interpret is None:
         interpret = not _on_tpu()
     return rs.rglru_scan(a, b, h0, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# PDHG over a blocked-ELL operator (the core.solver backend="pallas" path)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("row_meta", "col_meta", "iters",
+                                             "interpret"))
+def pdhg_burst(c, tau, xmax, q, sig, ub, keep_n, keep_m,
+               row_idx, row_val, col_idx, col_val, x0, y0, *,
+               row_meta: tuple, col_meta: tuple, iters: int,
+               interpret: bool | None = None):
+    """One fused `iters`-iteration PDHG burst (kernels.pdhg_spmv).
+
+    Arrays are storage-padded (x side n_pad, y side m_pad); returns
+    (x, y, worst) with `worst` the terminal per-row residual vector
+    computed in-kernel.  `keep_n`/`keep_m` freeze coordinates (True =
+    hold), matching core.solver's adaptive batch semantics."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    return ps.pdhg_burst(c, tau, xmax, q, sig, ub, keep_n, keep_m,
+                         row_idx, row_val, col_idx, col_val, x0, y0,
+                         row_meta=row_meta, col_meta=col_meta, iters=iters,
+                         interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("row_meta", "col_meta",
+                                             "num_inst", "chunk",
+                                             "max_chunks", "interpret"))
+def pdhg_adaptive(c, tau, xmax, q, sig, ub, row_idx, row_val, col_idx,
+                  col_val, x0, y0, tols, inst_n, inst_m, *,
+                  num_inst: int, row_meta: tuple, col_meta: tuple,
+                  chunk: int, max_chunks: int,
+                  interpret: bool | None = None):
+    """Adaptive PDHG over a block-stacked instance batch, Pallas bursts.
+
+    The exact semantics of core.solver._pdhg_run_adaptive — `chunk`-
+    iteration bursts inside one jitted lax.while_loop, per-instance
+    residuals checked after every burst, converged instances frozen —
+    but each burst is one fused Pallas kernel and the residual vector
+    comes back from the kernel itself (no extra SpMV per check).
+
+    `inst_n`/`inst_m` map storage coordinates to instance ids, with
+    padded slots mapped to the dump segment `num_inst`.  Returns
+    (x, y, per-instance residuals, per-instance chunks used)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+
+    def burst(x, y, frozen):
+        frozen_ext = jnp.concatenate(
+            [frozen, jnp.ones((1,), bool)])          # padded slots frozen
+        return ps.pdhg_burst(
+            c, tau, xmax, q, sig, ub, frozen_ext[inst_n], frozen_ext[inst_m],
+            row_idx, row_val, col_idx, col_val, x, y,
+            row_meta=row_meta, col_meta=col_meta, iters=chunk,
+            interpret=interpret)
+
+    def residuals(worst):
+        return jax.ops.segment_max(worst, inst_m,
+                                   num_segments=num_inst + 1)[:num_inst]
+
+    def cond(state):
+        _, _, _, k, frozen, _ = state
+        return (k < max_chunks) & ~frozen.all()
+
+    def step(state):
+        x, y, _, k, frozen, used = state
+        x, y, worst = burst(x, y, frozen)
+        frozen_new = frozen | (residuals(worst) <= tols)
+        used = jnp.where(frozen, used, k + 1)
+        return x, y, worst, k + 1, frozen_new, used
+
+    m_pad = y0.shape[0]
+    state0 = (x0, y0, jnp.zeros(m_pad, x0.dtype), 0,
+              jnp.zeros(num_inst, dtype=bool),
+              jnp.zeros(num_inst, dtype=jnp.int32))
+    x, y, worst, _, _, used = jax.lax.while_loop(cond, step, state0)
+    return x, y, residuals(worst), used

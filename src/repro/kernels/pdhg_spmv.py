@@ -1,0 +1,240 @@
+"""Pallas fused PDHG iteration burst over a blocked-ELL sparse operator.
+
+The routing-LP hot loop (core.solver) spends essentially all of its time
+in two sparse mat-vecs per iteration — K.x and K^T.y over the COO
+constraint matrix — plus elementwise prox/clip updates.  The XLA backend
+lowers these to 1-D scatter-adds; this module provides the alternative
+`backend="pallas"` lowering: the COO operator is re-packed into a padded
+**blocked-ELL** layout (gather-friendly, no scatters at all) and a whole
+`iters`-iteration PDHG burst — K^T.y gather, primal prox/clip against
+xmax, K.x, dual ascent + inequality projection, and the terminal
+residual vector — runs as ONE Pallas kernel with every vector resident
+in VMEM.
+
+Blocked-ELL layout (`ell_blocks` / `ell_pack`)
+----------------------------------------------
+Rows keep their original order (no permutation — PDHG vectors stay in LP
+index space) and are grouped into blocks of `bm` consecutive rows; each
+block is padded to its own width (the block's max row degree, rounded up
+to a multiple of `align`) and stored row-major in one flat (idx, val)
+pair.  Padding entries carry idx=0, val=0 so they gather slot 0 and
+contribute nothing.  Per-block widths matter because the LP's row
+degrees cluster hard by construction — conservation rows carry ~2-5
+entries while server-egress rows carry hundreds — and a single global
+width would pad the narrow majority to the wide tail.  The transpose
+direction (K^T for the primal update) is the same layout built from the
+column index.
+
+Both directions ship with a pure-jnp oracle (`kernels.ref.ell_spmv` /
+`ref.pdhg_ell_burst_ref`) and are validated on CPU via `interpret=True`
+(tests/test_pdhg_kernels.py); on TPU the kernel lowers to Mosaic, where
+`align` should be raised to the 128-lane width (see docs/KERNELS.md for
+the layout/padding rules).
+
+Trajectory contract: the kernel computes exactly the update of
+`core.solver._pdhg_ops` — same preconditioners, same prox, same freeze
+masks — so `backend="pallas"` differs from `"xla"` only by the
+floating-point reduction order of the SpMV (gather row-sums vs
+scatter-adds).  Metrics agree to ~1e-4 relative; bit-for-bit identity is
+NOT promised and the default backend stays "xla".
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+@dataclasses.dataclass(frozen=True)
+class EllBlocks:
+    """One SpMV direction in blocked-ELL: per stored row, a padded gather.
+
+    Block b holds rows [b*bm, (b+1)*bm) in row-major order at
+    idx/val[offsets[b] : offsets[b] + bm*widths[b]]; `n_rows` true rows,
+    padded up to `n_rows_pad = n_blocks * bm` with empty rows."""
+
+    idx: np.ndarray            # (total,) int32 gather indices, 0 for padding
+    val: np.ndarray            # (total,) float coefficients, 0 for padding
+    offsets: tuple[int, ...]   # (n_blocks,) flat start of each block
+    widths: tuple[int, ...]    # (n_blocks,) padded width of each block
+    bm: int                    # rows per block
+    n_rows: int                # true row count
+    n_rows_pad: int            # n_blocks * bm
+
+    @property
+    def meta(self) -> tuple:
+        """Hashable static description for jit caching."""
+        return (self.offsets, self.widths, self.bm, self.n_rows_pad)
+
+    @property
+    def fill(self) -> float:
+        """Fraction of stored slots that carry a real entry."""
+        return float(np.count_nonzero(self.val)) / max(len(self.val), 1)
+
+
+def ell_blocks(row: np.ndarray, col: np.ndarray, val: np.ndarray,
+               n_rows: int, *, bm: int = 8, align: int = 8) -> EllBlocks:
+    """Pack COO entries into blocked-ELL rows keyed by `row`.
+
+    Entries keep their COO appearance order within each row (stable
+    sort), so repeated packs of the same operator are bit-identical.
+    `bm` rows per block; each block's width is its max row degree rounded
+    up to a multiple of `align` (>= align even for all-empty blocks, so
+    every block is addressable with one static-shape gather)."""
+    assert bm >= 1 and align >= 1
+    row = np.asarray(row, np.int64)
+    nnz = len(row)
+    order = np.argsort(row, kind="stable")
+    counts = np.bincount(row, minlength=max(n_rows, 1))
+    starts = np.concatenate([[0], np.cumsum(counts)])
+    # position of each entry within its row
+    pos = np.arange(nnz, dtype=np.int64) - starts[row[order]]
+
+    n_blocks = max(-(-n_rows // bm), 1)
+    widths, offsets = [], []
+    off = 0
+    for b in range(n_blocks):
+        w = int(counts[b * bm:(b + 1) * bm].max(initial=0))
+        w = max(-(-w // align) * align, align)
+        offsets.append(off)
+        widths.append(w)
+        off += bm * w
+    widths_arr = np.asarray(widths, np.int64)
+    offsets_arr = np.asarray(offsets, np.int64)
+
+    idx = np.zeros(off, np.int32)
+    vals = np.zeros(off, np.float32)
+    r = row[order]
+    blk = r // bm
+    flat = offsets_arr[blk] + (r - blk * bm) * widths_arr[blk] + pos
+    idx[flat] = np.asarray(col, np.int64)[order].astype(np.int32)
+    vals[flat] = np.asarray(val)[order].astype(np.float32)
+    return EllBlocks(idx=idx, val=vals, offsets=tuple(offsets),
+                     widths=tuple(widths), bm=bm, n_rows=n_rows,
+                     n_rows_pad=n_blocks * bm)
+
+
+@dataclasses.dataclass(frozen=True)
+class EllOperator:
+    """K (m x n) packed both ways for the fused kernel: `rows` gathers x
+    to produce K.x (one stored row per constraint), `cols` gathers y to
+    produce K^T.y (one stored row per variable)."""
+
+    rows: EllBlocks
+    cols: EllBlocks
+    m: int
+    n: int
+
+    @property
+    def m_pad(self) -> int:
+        return self.rows.n_rows_pad
+
+    @property
+    def n_pad(self) -> int:
+        return self.cols.n_rows_pad
+
+
+def ell_pack(row: np.ndarray, col: np.ndarray, val: np.ndarray,
+             m: int, n: int, *, bm: int = 8, align: int = 8) -> EllOperator:
+    """Pack a COO operator into both blocked-ELL directions."""
+    return EllOperator(
+        rows=ell_blocks(row, col, val, m, bm=bm, align=align),
+        cols=ell_blocks(col, row, val, n, bm=bm, align=align),
+        m=m, n=n)
+
+
+def spmv_blocks(vec, idx, val, *, offsets, widths, bm, n_rows_pad):
+    """Blocked-ELL SpMV as pure jnp ops: per block, gather `vec` at the
+    stored indices, scale, and row-sum.  Shared verbatim by the Pallas
+    kernel body and the `ref` oracle so the two can only differ through
+    Pallas lowering itself (the parity tests pin that)."""
+    outs = []
+    for off, w in zip(offsets, widths):
+        ib = jax.lax.slice_in_dim(idx, off, off + bm * w).reshape(bm, w)
+        vb = jax.lax.slice_in_dim(val, off, off + bm * w).reshape(bm, w)
+        outs.append((jnp.take(vec, ib, axis=0) * vb).sum(axis=1))
+    return jnp.concatenate(outs) if len(outs) > 1 else outs[0]
+
+
+def pdhg_update_burst(x0, y0, c, tau, xmax, q, sig, ub, keep_n, keep_m,
+                      row_idx, row_val, col_idx, col_val, *,
+                      row_meta: tuple, col_meta: tuple, iters: int):
+    """`iters` iterations of the exact `core.solver._pdhg_ops` update
+    over the blocked-ELL operator, plus the terminal per-row residual
+    vector (|K_eq x - b| on equality rows, max(K_ub x - h, 0) on
+    inequality rows).  Pure traced jnp — THE shared body: the Pallas
+    kernel and the `ref.pdhg_ell_burst_ref` oracle both call this
+    verbatim, so they can only differ through Pallas lowering itself.
+    Returns (x, y, worst)."""
+    ro, rw, rbm, rp = row_meta
+    co, cw, cbm, cp = col_meta
+
+    def Kx(x):
+        return spmv_blocks(x, row_idx, row_val, offsets=ro, widths=rw,
+                           bm=rbm, n_rows_pad=rp)
+
+    def KTy(y):
+        return spmv_blocks(y, col_idx, col_val, offsets=co, widths=cw,
+                           bm=cbm, n_rows_pad=cp)
+
+    def body(_, state):
+        x, y = state
+        x_new = jnp.clip(x - tau * (c + KTy(y)), 0.0, xmax)
+        x_new = jnp.where(keep_n, x, x_new)
+        x_bar = 2.0 * x_new - x
+        y_new = y + sig * (Kx(x_bar) - q)
+        y_new = jnp.where(ub, jnp.maximum(y_new, 0.0), y_new)
+        y_new = jnp.where(keep_m, y, y_new)
+        return x_new, y_new
+
+    x, y = jax.lax.fori_loop(0, iters, body, (x0, y0))
+    r = Kx(x) - q
+    return x, y, jnp.where(ub, jnp.maximum(r, 0.0), jnp.abs(r))
+
+
+def _burst_kernel(c_ref, tau_ref, xmax_ref, q_ref, sig_ref, ub_ref,
+                  keep_n_ref, keep_m_ref, rid_ref, rval_ref, cid_ref,
+                  cval_ref, x0_ref, y0_ref,
+                  xo_ref, yo_ref, worst_ref, *,
+                  row_meta: tuple, col_meta: tuple, iters: int):
+    """One fused PDHG burst, everything VMEM-resident: read the refs,
+    run the shared update body, write the final iterates and residual
+    vector — the caller segment-maxes it per instance, so convergence
+    checks never re-run the SpMV."""
+    x, y, worst = pdhg_update_burst(
+        x0_ref[...], y0_ref[...], c_ref[...], tau_ref[...], xmax_ref[...],
+        q_ref[...], sig_ref[...], ub_ref[...], keep_n_ref[...],
+        keep_m_ref[...], rid_ref[...], rval_ref[...], cid_ref[...],
+        cval_ref[...], row_meta=row_meta, col_meta=col_meta, iters=iters)
+    xo_ref[...] = x
+    yo_ref[...] = y
+    worst_ref[...] = worst
+
+
+def pdhg_burst(c, tau, xmax, q, sig, ub, keep_n, keep_m,
+               row_idx, row_val, col_idx, col_val, x0, y0, *,
+               row_meta: tuple, col_meta: tuple, iters: int,
+               interpret: bool = True):
+    """Run one fused PDHG burst; returns (x, y, worst).
+
+    All vectors are storage-padded: x-side arrays have length n_pad,
+    y-side length m_pad (see ell_pack; padded slots carry xmax=0 / q=0
+    and stay fixed at zero).  `keep_n`/`keep_m` are per-coordinate
+    freeze masks (True = hold), identical in meaning to the adaptive
+    batch kernel in core.solver."""
+    n_pad, m_pad = x0.shape[0], y0.shape[0]
+    f32 = jnp.float32
+    kernel = functools.partial(_burst_kernel, row_meta=row_meta,
+                               col_meta=col_meta, iters=iters)
+    return pl.pallas_call(
+        kernel,
+        out_shape=(jax.ShapeDtypeStruct((n_pad,), f32),
+                   jax.ShapeDtypeStruct((m_pad,), f32),
+                   jax.ShapeDtypeStruct((m_pad,), f32)),
+        interpret=interpret,
+    )(c, tau, xmax, q, sig, ub, keep_n, keep_m,
+      row_idx, row_val, col_idx, col_val, x0, y0)

@@ -17,7 +17,7 @@ import argparse
 import pathlib
 import time
 
-from repro.core import failures, topology, traffic
+from repro.core import failures, solver, topology, traffic
 
 from .report import write_csv, write_markdown
 from .runner import ALL_TOPOS, OBJECTIVES, SweepSpec, run_sweep
@@ -60,6 +60,10 @@ def main(argv=None) -> int:
                     help="fixed slot count (default: auto per instance)")
     ap.add_argument("--iters", type=int, default=3000,
                     help="PDHG iterations before residual-driven restarts")
+    ap.add_argument("--backend", default="xla", choices=solver.BACKENDS,
+                    help="PDHG lowering: xla (COO scatters, default) or "
+                         "pallas (fused blocked-ELL kernel bursts; "
+                         "interpret mode on CPU)")
     ap.add_argument("--oracle-check", type=int, default=2,
                     help="instances to spot-check against the exact MILP "
                          "(cheapest first; 0 disables)")
@@ -79,7 +83,8 @@ def main(argv=None) -> int:
                   if args.failures else ()),
         total_gbits=args.total_gbits, n_map=args.n_map,
         n_reduce=args.n_reduce, n_slots=args.slots or None,
-        iters=args.iters, oracle_check=args.oracle_check,
+        iters=args.iters, backend=args.backend,
+        oracle_check=args.oracle_check,
         oracle_time_limit=args.oracle_time_limit)
 
     try:

@@ -6,6 +6,15 @@ groups, mean +/- std over the seed vector for energy and completion.
 Degraded-fabric records (SweepRecord.failure != "none") get their own
 survivability table — capacity lost, Gbits delivered, and the degraded
 E/M — aggregated over patterns and seeds.
+
+Units in every emitted table and CSV row follow the paper exactly:
+E columns are Joules from the activity-power accounting of eqs.
+(19)-(22) (per-device ON power p_max plus the eps NIC-offload J/Gbit
+term), M columns are seconds from the completion-time equations
+(39)-(45), volumes are Gbits and capacities Gbps (Tables II-III).
+Every number is core.timeslot.evaluate applied to the packed schedule
+— the same single source of truth both solver backends report through;
+docs/REPRODUCING.md carries the field-by-field CSV glossary.
 """
 from __future__ import annotations
 
@@ -22,6 +31,10 @@ CSV_FIELDS = [f.name for f in dataclasses.fields(SweepRecord)]
 
 
 def write_csv(records: list[SweepRecord], path) -> pathlib.Path:
+    """One row per solved instance, fields in SweepRecord order (see the
+    glossary in docs/REPRODUCING.md §5).  None fields — the oracle_*
+    columns of instances that were not spot-checked — are emitted as
+    empty cells, never as 0."""
     path = pathlib.Path(path)
     path.parent.mkdir(parents=True, exist_ok=True)
     with open(path, "w", newline="") as fh:
@@ -39,6 +52,10 @@ def _fmt(mean: float, std: float, digits: int = 1) -> str:
 
 
 def write_markdown(records: list[SweepRecord], path) -> pathlib.Path:
+    """Paper-style summary: per objective, a topology x pattern grid of
+    "E (J)" (eqs. 19-22) and "M (s)" (eqs. 39-45) as mean ± std over
+    seeds; plus the degraded-fabric survivability table and the oracle
+    spot-check table when those record kinds are present."""
     path = pathlib.Path(path)
     path.parent.mkdir(parents=True, exist_ok=True)
     degraded = [r for r in records if r.failure != "none"]

@@ -50,6 +50,10 @@ class SweepSpec:
     # loose LP tolerance: the packed schedule is re-scored with the exact
     # paper model regardless, and packing is robust to ~1e-3 residuals
     tol: float = 2e-3
+    # PDHG lowering: "xla" (COO scatters, default) or "pallas" (fused
+    # blocked-ELL bursts, repro.kernels.pdhg_spmv); metrics agree to
+    # ~1e-4 relative — see docs/SOLVER.md "Backends"
+    backend: str = "xla"
     path_slack: int | None = 2        # near-shortest route pruning; None = off
     oracle_check: int = 0             # instances to spot-check vs the MILP
     oracle_time_limit: float = 60.0
@@ -72,6 +76,9 @@ class SweepSpec:
             if pt not in traffic.PATTERNS:
                 raise ValueError(f"unknown pattern {pt!r}; "
                                  f"have {sorted(traffic.PATTERNS)}")
+        if self.backend not in solver.BACKENDS:
+            raise ValueError(f"unknown solver backend {self.backend!r}; "
+                             f"have {solver.BACKENDS}")
         for fl in self.failures:
             if fl not in failures.SCENARIOS or fl == "none":
                 # "none" is rejected too: its records would carry
@@ -101,6 +108,7 @@ class SweepRecord:
     failure: str = "none"             # failure preset ("none" = healthy)
     degradation_ratio: float = 0.0    # fraction of aggregate Gbps lost
     survivability: float = 1.0        # served / offered Gbits
+    backend: str = "xla"              # PDHG lowering that produced this row
     oracle_energy_j: float | None = None
     oracle_completion_s: float | None = None
     oracle_gap: float | None = None   # (fast - oracle) / oracle, primary metric
@@ -134,7 +142,7 @@ def _retry_unfinished(probs, results, internal_obj: str, spec: SweepSpec):
                 p.topo, p.coflow, n_slots=2 * p.n_slots, rho=p.rho,
                 path_slack=p.path_slack if tries == 0 else None)
             r = solver.solve_fast(p, internal_obj, iters=spec.iters,
-                                  tol=spec.tol)
+                                  tol=spec.tol, backend=spec.backend)
             tries += 1
         probs[i], results[i] = p, r
 
@@ -143,7 +151,7 @@ def _solve_group(probs, internal_obj: str, spec: SweepSpec):
     """Batched healthy solve + retry ladder; returns amortized wall time."""
     t0 = time.perf_counter()
     results = solver.solve_fast_batch(probs, internal_obj, iters=spec.iters,
-                                      tol=spec.tol)
+                                      tol=spec.tol, backend=spec.backend)
     _retry_unfinished(probs, results, internal_obj, spec)
     return results, (time.perf_counter() - t0) / max(len(probs), 1)
 
@@ -158,14 +166,16 @@ def _solve_failure_group(healthy_probs, healthy_results, fail_name: str,
              for seed, p in zip(spec.seeds, healthy_probs)]
     results = solver.solve_fast_ensemble(probs, internal_obj,
                                          warm=healthy_results,
-                                         iters=spec.iters, tol=spec.tol)
+                                         iters=spec.iters, tol=spec.tol,
+                                         backend=spec.backend)
     _retry_unfinished(probs, results, internal_obj, spec)
     return probs, results, (time.perf_counter() - t0) / max(len(probs), 1)
 
 
 def _record(topo_name, obj, pat_name, seed, p, r, per_inst_s, *,
             offered: float, failure: str = "none",
-            degradation_ratio: float = 0.0) -> SweepRecord:
+            degradation_ratio: float = 0.0,
+            backend: str = "xla") -> SweepRecord:
     """One SweepRecord from a solved instance.  `offered` is the healthy
     demand in Gbits (a degraded instance's own coflow excludes flows the
     failure disconnected, but survivability is measured against what the
@@ -181,7 +191,8 @@ def _record(topo_name, obj, pat_name, seed, p, r, per_inst_s, *,
         lp_primal_residual=r.lp_primal_residual,
         remaining_gbits=r.remaining_gbits, solve_s=per_inst_s,
         failure=failure, degradation_ratio=degradation_ratio,
-        survivability=float(m.served.sum()) / max(offered, 1e-12))
+        survivability=float(m.served.sum()) / max(offered, 1e-12),
+        backend=backend)
 
 
 def run_sweep(spec: SweepSpec, *, log: Callable[[str], None] | None = None
@@ -207,7 +218,8 @@ def run_sweep(spec: SweepSpec, *, log: Callable[[str], None] | None = None
                 for seed, p, r, off in zip(spec.seeds, probs, results,
                                            offered):
                     records.append(_record(topo_name, obj, pat_name, seed,
-                                           p, r, per_inst_s, offered=off))
+                                           p, r, per_inst_s, offered=off,
+                                           backend=spec.backend))
                     problems.append(p)
                 say(f"{topo_name:10s} {pat_name:8s} min-{obj:10s} "
                     f"{len(probs)} seeds  "
@@ -223,7 +235,8 @@ def run_sweep(spec: SweepSpec, *, log: Callable[[str], None] | None = None
                         ratio = failures.degradation_ratio(hp.topo, fp.topo)
                         rec = _record(topo_name, obj, pat_name, seed, fp, fr,
                                       f_s, offered=off, failure=fail_name,
-                                      degradation_ratio=ratio)
+                                      degradation_ratio=ratio,
+                                      backend=spec.backend)
                         ratios.append(ratio)
                         survs.append(rec.survivability)
                         records.append(rec)
