@@ -2,6 +2,8 @@
 
   topology    - the six paper DCN graphs (Figs. 4-5, Table II)
   traffic     - MapReduce shuffle co-flow model (§IV-B)
+  arrivals    - online co-flow arrival traces + rolling-horizon driver
+                (warm-started epoch re-solves)
   timeslot    - the time-slotted problem + exact eq.(19)-(45) accounting
   oracle      - exact MILP (HiGHS), the paper-faithful reference (§V)
   solver      - JAX PDHG routing LP + slot packing (production fast path,
@@ -11,20 +13,25 @@
   wavelength  - AWGR cell wiring + wavelength assignment MILP (§III)
   fabric      - TPU ICI adaptation: collective slot plans for training
 """
-from . import (fabric, failures, oracle, solver, timeslot, topology, traffic,
-               wavelength)
+from . import (arrivals, fabric, failures, oracle, solver, timeslot,
+               topology, traffic, wavelength)
+from .arrivals import Arrival, ArrivalSpec, OnlineResult, generate_trace, \
+    run_online
 from .fabric import Bucket, FabricSpec, SlotPlan, plan_collectives, v5e_fabric
 from .failures import FailureScenario
 from .timeslot import Metrics, ScheduleProblem, evaluate, suggest_n_slots
 from .topology import Topology, build as build_topology
-from .traffic import (CoflowSet, TrafficPattern, generate, generate_batch,
-                      pattern, shuffle_traffic)
+from .traffic import (CoflowSet, TrafficPattern, concat_coflows,
+                      empty_coflow, generate, generate_batch, pattern,
+                      shuffle_traffic)
 
 __all__ = [
-    "Bucket", "CoflowSet", "FabricSpec", "FailureScenario", "Metrics",
-    "ScheduleProblem", "SlotPlan", "Topology", "TrafficPattern",
-    "build_topology", "evaluate", "fabric", "failures", "generate",
-    "generate_batch", "oracle", "pattern", "plan_collectives",
-    "shuffle_traffic", "solver", "suggest_n_slots", "timeslot", "topology",
-    "traffic", "v5e_fabric", "wavelength",
+    "Arrival", "ArrivalSpec", "Bucket", "CoflowSet", "FabricSpec",
+    "FailureScenario", "Metrics", "OnlineResult", "ScheduleProblem",
+    "SlotPlan", "Topology", "TrafficPattern", "arrivals", "build_topology",
+    "concat_coflows", "empty_coflow", "evaluate", "fabric", "failures",
+    "generate", "generate_batch", "generate_trace", "oracle", "pattern",
+    "plan_collectives", "run_online", "shuffle_traffic", "solver",
+    "suggest_n_slots", "timeslot", "topology", "traffic", "v5e_fabric",
+    "wavelength",
 ]

@@ -184,6 +184,19 @@ def _check_backend(backend: str) -> None:
                          f"have {BACKENDS}")
 
 
+def _solve_lp_trivial(lp: StructuredLP) -> PDHGResult:
+    """Closed-form solve for degenerate LPs (no variables or no rows).
+
+    A zero-flow CoflowSet — possible when a rolling-horizon arrival
+    epoch is empty — produces an LP with no constraint rows (and, for
+    the energy objective, no variables at all).  The box-constrained
+    minimum is then coordinate-wise: x_j = 0 for c_j >= 0 (every real
+    objective here is nonnegative), xmax_j otherwise."""
+    x = np.where(lp.c < 0.0,
+                 np.where(np.isfinite(lp.xmax), lp.xmax, 0.0), 0.0)
+    return PDHGResult(x, 0.0, 0.0, 0, y=np.zeros(lp.m))
+
+
 def _pack_pallas(c, row, col, val, b, h, xmax, m_eq):
     """Pack one (already max-normalized, xmax-clamped) LP for the Pallas
     kernels: blocked-ELL tables for both SpMV directions plus the
@@ -348,6 +361,8 @@ def solve_lp(lp: StructuredLP, iters: int = 4000, *,
     _check_backend(backend)
     if tol is None:
         tol = 1e-4 * max(float(np.abs(lp.b).max(initial=0.0)), 1.0)
+    if lp.n == 0 or lp.m == 0:
+        return _solve_lp_trivial(lp)
     if backend == "pallas":
         return _solve_lp_pallas(lp, iters, tol, max_restarts, x0, y0)
     xmax = np.where(np.isfinite(lp.xmax), lp.xmax, 1e12)
@@ -399,6 +414,9 @@ def _admissible(p: ScheduleProblem):
             trip_f.append(np.full(len(ws), f))
             trip_e.append(np.full(len(ws), e))
             trip_w.append(ws)
+    if not trip_f:          # zero-flow instance (e.g. an empty arrival epoch)
+        z = np.zeros(0, dtype=np.int64)
+        return z, z.copy(), z.copy()
     kf = np.concatenate(trip_f).astype(np.int64)
     ke = np.concatenate(trip_e).astype(np.int64)
     kw = np.concatenate(trip_w).astype(np.int64)
@@ -643,6 +661,15 @@ def path_decompose(p: ScheduleProblem, idx: RoutingIndex,
             budget -= amt
             triples = np.array([k_of[(f, e, w)] for e, w in path], dtype=np.int64)
             paths.append(FlowPath(f, triples, amt, int(path[0][1])))
+        if len(paths) > n_before and budget > 1e-9:
+            # the LP iterate routed less than the demand (loose tolerance
+            # or dropped cyclic residue): rescale this flow's paths so the
+            # decomposition conserves per-flow volume exactly.  The common
+            # factor leaves temporal_pack's proportional shares unchanged.
+            scale = float(p.coflow.size[f]) / (float(p.coflow.size[f])
+                                               - budget)
+            for fp in paths[n_before:]:
+                fp.volume *= scale
         if len(paths) == n_before:
             # no LP volume survived the 1e-9 gate (tiny flows under a loose
             # LP tolerance) — ship the whole demand on any admissible route
@@ -800,6 +827,10 @@ class FastPathResult:
     paths: list[FlowPath] | None = None
     iterations: int = 0       # PDHG iterations actually spent
     lp_cscale: float = 1.0    # max|c| the LP was normalized by (duals scale)
+    # True iff PDHG actually started from a projected warm state — stays
+    # False when solve_fast_warm's projection fell back to a cold start,
+    # so callers' warm-vs-cold accounting reflects what really ran
+    warm_started: bool = False
 
 
 def _assemble_fast_result(p: ScheduleProblem, lp: StructuredLP,
@@ -1106,7 +1137,6 @@ def solve_lp_batch(lps: list[StructuredLP], iters: int = 4000, *,
     y_fin = {}
     res_fin = np.zeros(B)
     iters_fin = np.zeros(B, dtype=int)
-    active = list(range(B))
     states = None
     if warm_starts is not None:
         assert len(warm_starts) == B
@@ -1116,6 +1146,15 @@ def solve_lp_batch(lps: list[StructuredLP], iters: int = 4000, *,
             assert x0.shape == (lps[i].n,) and y0.shape == (lps[i].m,), \
                 (i, x0.shape, y0.shape, lps[i].n, lps[i].m)
             x_fin[i], y_fin[i] = x0, y0
+    # degenerate members (zero-flow instances: no rows or no variables)
+    # solve in closed form and never enter the stacked dispatches
+    active = []
+    for i in range(B):
+        if lps[i].n == 0 or lps[i].m == 0:
+            triv = _solve_lp_trivial(lps[i])
+            x_fin[i], y_fin[i] = triv.x, triv.y
+        else:
+            active.append(i)
     total_budget = sum(iters * 2 ** a for a in range(max_restarts + 1))
     budget = max(chunk, iters // 4) if adaptive else iters
     spent = 0
@@ -1188,7 +1227,8 @@ def solve_fast_batch(problems: list[ScheduleProblem],
 # ---------------------------------------------------------------------------
 
 def project_warm_start(warm: FastPathResult, p_dst: ScheduleProblem,
-                       lp_dst: StructuredLP, idx_dst: RoutingIndex
+                       lp_dst: StructuredLP, idx_dst: RoutingIndex, *,
+                       flow_map: np.ndarray | None = None
                        ) -> tuple[np.ndarray, np.ndarray]:
     """Map a finished solve's PDHG state onto a structurally related LP.
 
@@ -1209,12 +1249,36 @@ def project_warm_start(warm: FastPathResult, p_dst: ScheduleProblem,
     solve_lp or solve_lp_batch(warm_starts=...).  The projection is a
     heuristic start, not a feasible point — PDHG repairs the remaining
     demand/capacity mismatch, which for localized failures takes a small
-    fraction of a cold solve's iterations."""
+    fraction of a cold solve's iterations.
+
+    `flow_map` generalizes the projection to LPs whose *flow indexing*
+    differs from the source solve's (the rolling-horizon arrival engine,
+    core.arrivals, carries residual flows forward under new indices and
+    appends newly arrived flows): flow_map[i] is the source-instance
+    flow that dst flow i continues, or -1 for a brand-new flow (which
+    starts cold).  None keeps the historical identity mapping."""
     src_idx = warm.index
     if src_idx is None or warm.lp_x is None:
         raise ValueError("warm result lacks PDHG state (lp_x/index); "
                          "it must come from solve_fast/solve_fast_batch")
     F, E, W, _ = p_dst.shape_x
+    if flow_map is not None:
+        flow_map = np.asarray(flow_map, dtype=np.int64)
+        if flow_map.shape != (F,):
+            raise ValueError(f"flow_map shape {flow_map.shape} != ({F},)")
+    # dst flow of each source flow (identity when flow_map is None)
+    dst_of = ({int(s): i for i, s in enumerate(flow_map) if s >= 0}
+              if flow_map is not None else None)
+
+    def src_key(key):
+        """Translate a dst row identity to the source instance's."""
+        if flow_map is not None and key[0] in ("c", "d"):
+            fs = int(flow_map[key[1]])
+            if fs < 0:
+                return None
+            return (key[0], fs) + key[2:]
+        return key
+
     K_dst = len(idx_dst.kf)
     key_dst = (idx_dst.kf * E + idx_dst.ke) * W + idx_dst.kw   # sorted
 
@@ -1229,8 +1293,8 @@ def project_warm_start(warm: FastPathResult, p_dst: ScheduleProblem,
     lost = np.zeros(F)
     shipped = np.zeros(F)
     for path in warm.paths or []:
-        f = path.flow
-        if size_dst[f] <= 0.0 or path.volume <= 0.0:
+        f = (path.flow if dst_of is None else dst_of.get(path.flow, -1))
+        if f < 0 or f >= F or size_dst[f] <= 0.0 or path.volume <= 0.0:
             continue
         hops = [(int(ke_s[k]), int(kw_s[k])) for k in path.triples]
         pos = [dst_pos(f, e, w) for e, w in hops]
@@ -1294,11 +1358,12 @@ def project_warm_start(warm: FastPathResult, p_dst: ScheduleProblem,
         src_eq = {k: i for i, k in enumerate(src_idx.eq_keys)}
         src_ub = {k: i for i, k in enumerate(src_idx.ub_keys)}
         for i, k in enumerate(idx_dst.eq_keys):
-            j = src_eq.get(k)
+            ks = src_key(k)
+            j = src_eq.get(ks) if ks is not None else None
             if j is not None:
                 y0[i] = warm.lp_y[j] * rescale
         for i, k in enumerate(idx_dst.ub_keys):
-            j = src_ub.get(k)
+            j = src_ub.get(k)          # capacity rows carry no flow index
             if j is not None:
                 y0[lp_dst.m_eq + i] = warm.lp_y[m_eq_src + j] * rescale
     return x0, y0
@@ -1321,6 +1386,48 @@ def resolve_incremental(p: ScheduleProblem, objective: str,
     x0, y0 = project_warm_start(warm, p, lp, idx)
     res = solve_lp(lp, iters=iters, tol=tol, x0=x0, y0=y0, backend=backend)
     return _assemble_fast_result(p, lp, idx, res)
+
+
+def solve_fast_warm(p: ScheduleProblem, objective: str = "energy", *,
+                    warm: FastPathResult | None = None,
+                    flow_map: np.ndarray | None = None,
+                    iters: int = 4000, tol: float | None = None,
+                    chunk: int = 250, backend: str = "xla"
+                    ) -> FastPathResult:
+    """Single-instance fast path with an optional projected warm start and
+    the fused adaptive convergence loop.
+
+    This is the epoch re-solve primitive of the rolling-horizon arrival
+    engine (core.arrivals): unlike solve_fast — whose restart ladder
+    always spends its full first rung — the adaptive chunked dispatch
+    (solve_lp_batch with B=1) freezes within one `chunk`-iteration
+    residual check of convergence, so a good warm start actually shows
+    up as saved iterations and wall time.
+
+    `warm` is a previous FastPathResult to project onto this problem
+    (project_warm_start); `flow_map[i]` names the warm instance's flow
+    that flow i of `p` continues (-1 = new flow, identity when None).
+    The start degrades gracefully to cold: if `warm` lacks PDHG state,
+    its topology shape differs from `p`'s (different edge/wavelength
+    indexing — the projection would be meaningless), or the projection
+    itself fails, the solve silently starts from zero."""
+    _check_backend(backend)
+    lp, idx = build_routing_lp(p, objective)
+    warm_starts = None
+    if (warm is not None and warm.index is not None
+            and warm.lp_x is not None and warm.schedule is not None
+            and warm.schedule.shape[1:3] == (p.topo.n_edges,
+                                             p.topo.n_wavelengths)):
+        try:
+            warm_starts = [project_warm_start(warm, p, lp, idx,
+                                              flow_map=flow_map)]
+        except (ValueError, KeyError, IndexError):
+            warm_starts = None         # structure changed -> cold start
+    res = solve_lp_batch([lp], iters=iters, tol=tol, chunk=chunk,
+                         warm_starts=warm_starts, backend=backend)[0]
+    out = _assemble_fast_result(p, lp, idx, res)
+    out.warm_started = warm_starts is not None
+    return out
 
 
 def solve_fast_ensemble(problems: list[ScheduleProblem],

@@ -190,6 +190,31 @@ def _delta_from_x(p: ScheduleProblem, x: np.ndarray) -> np.ndarray:
     return out_src - in_src
 
 
+def _activity_energy(p: ScheduleProblem, psi: np.ndarray
+                     ) -> tuple[np.ndarray, np.ndarray, float]:
+    """Device activity + energy (eqs. 19-22) of an (E, W, T') traffic
+    tensor: per-vertex carried traffic beta, the ON mask, and total
+    Joules.  Single source of truth for evaluate (T' = full horizon)
+    and prefix_energy (T' = an executed epoch prefix)."""
+    D = p.topo.slot_duration
+    beta = np.zeros((p.topo.n_vertices,) + psi.shape[1:])
+    np.add.at(beta, p.e_src, psi)
+    np.add.at(beta, p.e_dst, psi)
+    active = beta > TOL
+    energy = D * float((active * p.p_max[:, None, None]).sum())
+    energy += D * float((p.eps[:, None, None] * beta
+                         * p.is_server[:, None, None]).sum())
+    return beta, active, energy
+
+
+def prefix_energy(p: ScheduleProblem, x: np.ndarray, t_end: int) -> float:
+    """Exact eq. (19)-(22) energy of the first `t_end` slots of x —
+    evaluate()'s accounting applied to a schedule prefix (the online
+    arrival engine re-plans the suffix, so only executed slots may burn
+    Joules)."""
+    return _activity_energy(p, x[:, :, :, :t_end].sum(axis=0))[2]
+
+
 def evaluate(p: ScheduleProblem, x: np.ndarray) -> Metrics:
     """Exact accounting of a schedule tensor with the paper's equations.
 
@@ -254,13 +279,7 @@ def evaluate(p: ScheduleProblem, x: np.ndarray) -> Metrics:
                 viol = max(viol, float(n_w_used.max(initial=0) - 1))
 
     # device activity (eqs. 31-38) and power (eqs. 19-21)
-    beta = np.zeros((p.topo.n_vertices, W, T))
-    np.add.at(beta, p.e_src, psi)
-    np.add.at(beta, p.e_dst, psi)
-    active = beta > TOL
-    p_dev = active * p.p_max[:, None, None]
-    energy = D * float(p_dev.sum())                       # eq. (22)
-    energy += D * float((p.eps[:, None, None] * beta * p.is_server[:, None, None]).sum())
+    beta, active, energy = _activity_energy(p, psi)       # eq. (22)
 
     # completion time M (eqs. 39-45): last active link's in-slot finish time
     with np.errstate(divide="ignore", invalid="ignore"):

@@ -202,3 +202,30 @@ def custom_coflow(src, dst, size, n_vertices: int) -> CoflowSet:
     size = np.asarray(size, dtype=np.float64)
     assert src.shape == dst.shape == size.shape
     return CoflowSet(src, dst, size, n_vertices)
+
+
+def empty_coflow(n_vertices: int) -> CoflowSet:
+    """A CoflowSet with zero flows (an arrival epoch with no work).
+
+    The whole solver stack accepts it: build_routing_lp produces an
+    empty (or theta-only) LP, solve_fast returns an all-zero schedule,
+    and evaluate scores it feasible with E = M = 0."""
+    z = np.zeros(0, dtype=np.int64)
+    return CoflowSet(z, z, np.zeros(0, dtype=np.float64), n_vertices)
+
+
+def concat_coflows(sets: list[CoflowSet], n_vertices: int) -> CoflowSet:
+    """Concatenate co-flow sets into one (flow order = input order).
+
+    Used by the rolling-horizon driver (core.arrivals) to merge carried
+    residual flows with newly arrived co-flows; also handy for scoring a
+    whole arrival trace as one offline instance."""
+    if not sets:
+        return empty_coflow(n_vertices)
+    for s in sets:
+        assert s.n_vertices == n_vertices, (s.n_vertices, n_vertices)
+    return CoflowSet(
+        np.concatenate([s.src for s in sets]).astype(np.int64),
+        np.concatenate([s.dst for s in sets]).astype(np.int64),
+        np.concatenate([s.size for s in sets]).astype(np.float64),
+        n_vertices)

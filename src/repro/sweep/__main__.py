@@ -17,7 +17,7 @@ import argparse
 import pathlib
 import time
 
-from repro.core import failures, solver, topology, traffic
+from repro.core import arrivals, failures, solver, topology, traffic
 
 from .report import write_csv, write_markdown
 from .runner import ALL_TOPOS, OBJECTIVES, SweepSpec, run_sweep
@@ -53,6 +53,18 @@ def main(argv=None) -> int:
                          f"comma list or 'all' "
                          f"({', '.join(k for k in failures.SCENARIOS if k != 'none')}); "
                          "bare --failures means 'all'")
+    ap.add_argument("--arrivals", nargs="?", const="all", default="",
+                    help="online-arrival families for rolling-horizon "
+                         "re-solves (core.arrivals): comma list or 'all' "
+                         f"({', '.join(arrivals.FAMILIES)}); "
+                         "bare --arrivals means 'all'")
+    ap.add_argument("--arrival-coflows", type=int, default=5,
+                    help="co-flows per arrival trace")
+    ap.add_argument("--arrival-mean-s", type=float, default=2.0,
+                    help="mean inter-arrival gap in seconds")
+    ap.add_argument("--epoch-s", type=float, default=0.0,
+                    help="rolling-horizon re-plan period in seconds "
+                         "(default: 4 slot durations)")
     ap.add_argument("--total-gbits", type=float, default=30.0)
     ap.add_argument("--n-map", type=int, default=10)
     ap.add_argument("--n-reduce", type=int, default=6)
@@ -81,6 +93,12 @@ def main(argv=None) -> int:
         seeds=tuple(range(args.seeds)),
         failures=(_csv_list(args.failures, fail_universe, "failure preset")
                   if args.failures else ()),
+        arrivals=(_csv_list(args.arrivals, arrivals.FAMILIES,
+                            "arrival family")
+                  if args.arrivals else ()),
+        arrival_coflows=args.arrival_coflows,
+        arrival_mean_s=args.arrival_mean_s,
+        epoch_s=args.epoch_s or None,
         total_gbits=args.total_gbits, n_map=args.n_map,
         n_reduce=args.n_reduce, n_slots=args.slots or None,
         iters=args.iters, backend=args.backend,

@@ -24,7 +24,8 @@ from typing import Callable
 
 import numpy as np
 
-from repro.core import failures, oracle, solver, timeslot, topology, traffic
+from repro.core import (arrivals, failures, oracle, solver, timeslot,
+                        topology, traffic)
 
 # user-facing objective name -> core.solver/oracle internal name
 OBJECTIVES = {"energy": "energy", "completion": "time"}
@@ -41,6 +42,13 @@ class SweepSpec:
     # failure presets (core.failures.SCENARIOS names); per preset each seed
     # draws one deterministic scenario and re-solves warm-started
     failures: tuple[str, ...] = ()
+    # online-arrival families (core.arrivals.FAMILIES); per family each seed
+    # draws one deterministic trace and runs the rolling-horizon driver
+    # (warm-started epoch re-solves) instead of a one-shot solve
+    arrivals: tuple[str, ...] = ()
+    arrival_coflows: int = 5          # co-flows per trace
+    arrival_mean_s: float = 2.0       # mean inter-arrival gap, seconds
+    epoch_s: float | None = None      # re-plan period (None = 4 slots)
     total_gbits: float = 30.0
     n_map: int = 10
     n_reduce: int = 6
@@ -86,6 +94,10 @@ class SweepSpec:
                 # report — an empty `failures` tuple is the healthy run
                 raise ValueError(f"unknown failure preset {fl!r}; "
                                  f"have {sorted(k for k in failures.SCENARIOS if k != 'none')}")
+        for fam in self.arrivals:
+            if fam not in arrivals.FAMILIES:
+                raise ValueError(f"unknown arrival family {fam!r}; "
+                                 f"have {sorted(arrivals.FAMILIES)}")
 
 
 @dataclasses.dataclass
@@ -109,6 +121,13 @@ class SweepRecord:
     degradation_ratio: float = 0.0    # fraction of aggregate Gbps lost
     survivability: float = 1.0        # served / offered Gbits
     backend: str = "xla"              # PDHG lowering that produced this row
+    # online-arrival rows (core.arrivals rolling-horizon driver);
+    # arrivals == "none" marks an offline (one-shot) row
+    arrivals: str = "none"            # arrival-process family
+    epochs: int = 0                   # rolling-horizon epochs run
+    mean_response_s: float = 0.0      # mean co-flow (t_done - t_arrive), s
+    backlog_gbits: float = 0.0        # demand unserved when the run ended
+    warm_iterations: float = 0.0      # mean PDHG iters per warm epoch
     oracle_energy_j: float | None = None
     oracle_completion_s: float | None = None
     oracle_gap: float | None = None   # (fast - oracle) / oracle, primary metric
@@ -170,6 +189,54 @@ def _solve_failure_group(healthy_probs, healthy_results, fail_name: str,
                                          backend=spec.backend)
     _retry_unfinished(probs, results, internal_obj, spec)
     return probs, results, (time.perf_counter() - t0) / max(len(probs), 1)
+
+
+def _solve_arrival_cell(topo, pat, fam: str, internal_obj: str,
+                        spec: SweepSpec, seed: int):
+    """One rolling-horizon run: a deterministic arrival trace for `seed`
+    re-planned per epoch with warm-started re-solves (core.arrivals)."""
+    aspec = arrivals.ArrivalSpec(family=fam,
+                                 n_coflows=spec.arrival_coflows,
+                                 mean_interarrival_s=spec.arrival_mean_s)
+    trace = arrivals.generate_trace(topo, pat, aspec, int(seed))
+    t0 = time.perf_counter()
+    res = arrivals.run_online(topo, trace, internal_obj,
+                              epoch_s=spec.epoch_s, rho=spec.rho,
+                              path_slack=spec.path_slack, iters=spec.iters,
+                              tol=spec.tol, backend=spec.backend)
+    return trace, res, time.perf_counter() - t0
+
+
+def _arrival_record(topo_name, obj, pat_name, seed, fam: str,
+                    trace: list, res, wall_s: float,
+                    backend: str) -> SweepRecord:
+    """One SweepRecord summarizing a whole rolling-horizon trace.  The
+    E/M columns hold the trace totals (executed-prefix energy summed
+    over epochs, last co-flow completion); per-epoch LP provenance
+    collapses to the worst epoch; lp_lower_bound is not meaningful
+    across epochs and is recorded as 0."""
+    offered = float(sum(a.coflow.total_gbits for a in trace))
+    return SweepRecord(
+        topo=topo_name, objective=obj, pattern=pat_name, seed=int(seed),
+        n_flows=int(sum(a.coflow.n_flows for a in trace)),
+        total_gbits=offered,
+        n_slots=max((e.n_slots for e in res.epochs), default=0),
+        energy_j=res.total_energy_j, completion_s=res.makespan_s,
+        feasible=all(e.feasible for e in res.epochs),
+        max_violation=max((e.max_violation for e in res.epochs),
+                          default=0.0),
+        lp_lower_bound=0.0,
+        lp_primal_residual=max((e.lp_primal_residual for e in res.epochs),
+                               default=0.0),
+        remaining_gbits=res.backlog_gbits,
+        solve_s=wall_s / max(res.n_epochs, 1),
+        survivability=(offered - res.backlog_gbits) / max(offered, 1e-12),
+        backend=backend, arrivals=fam, epochs=res.n_epochs,
+        # NaN (no co-flow finished) passes through: a 0.0 here would
+        # make the worst possible run read as instant completion
+        mean_response_s=res.mean_response_s,
+        backlog_gbits=res.backlog_gbits,
+        warm_iterations=res.warm_iterations)
 
 
 def _record(topo_name, obj, pat_name, seed, p, r, per_inst_s, *,
@@ -246,6 +313,27 @@ def run_sweep(spec: SweepSpec, *, log: Callable[[str], None] | None = None
                         f"cap-{np.mean(ratios):5.1%}  "
                         f"surv={np.mean(survs):6.1%}  "
                         f"({f_s*1e3:.0f} ms/inst warm)")
+                for fam in spec.arrivals:
+                    fam_recs = []
+                    for seed in spec.seeds:
+                        trace, res, wall = _solve_arrival_cell(
+                            topo, pat, fam, OBJECTIVES[obj], spec, seed)
+                        rec = _arrival_record(topo_name, obj, pat_name,
+                                              seed, fam, trace, res, wall,
+                                              spec.backend)
+                        fam_recs.append(rec)
+                        records.append(rec)
+                        # cheap placeholder keeps records/problems index-
+                        # aligned; _spot_check skips arrival rows, so
+                        # nothing ever reads it
+                        problems.append(timeslot.ScheduleProblem(
+                            topo, traffic.empty_coflow(topo.n_vertices),
+                            n_slots=2, rho=spec.rho))
+                    say(f"{topo_name:10s} {pat_name:8s} min-{obj:10s} "
+                        f"~{fam:9s} "
+                        f"epochs={np.mean([r.epochs for r in fam_recs]):4.1f}  "
+                        f"resp={np.mean([r.mean_response_s for r in fam_recs]):6.2f} s  "
+                        f"backlog={np.mean([r.backlog_gbits for r in fam_recs]):5.2f} Gbit")
     if spec.oracle_check:
         _spot_check(records, problems, spec, say)
     return records, problems
@@ -254,8 +342,10 @@ def run_sweep(spec: SweepSpec, *, log: Callable[[str], None] | None = None
 def _spot_check(records, problems, spec: SweepSpec, say) -> None:
     """Re-solve the cheapest `oracle_check` instances with the exact MILP
     and record the fast path's optimality gap on the primary metric."""
+    # arrival rows aggregate many epoch problems — there is no single
+    # instance the MILP could certify, so they are never spot-checked
     order = sorted(
-        range(len(records)),
+        (i for i in range(len(records)) if records[i].arrivals == "none"),
         key=lambda i: (problems[i].coflow.n_flows
                        * problems[i].topo.n_edges
                        * problems[i].topo.n_wavelengths

@@ -1,0 +1,94 @@
+"""Golden-metrics regression gate for the fast-path solver stack.
+
+A tiny pinned grid (2 topologies x 2 objectives x 1 seed) with expected
+exact paper-model Metrics committed under tests/golden/metrics.json.
+Every cell is solved with solve_fast on BOTH backends and compared to
+the committed numbers at 1e-4 relative — solver refactors (LP assembly,
+PDHG schedule, packing) cannot silently drift the reproduced paper
+numbers.  The committed values come from the "xla" backend; the pallas
+backend is held to the same envelope (the backends agree to ~1e-7,
+docs/SOLVER.md §7).
+
+Regenerate after an *intentional* numbers change:
+
+    PYTHONPATH=src python tests/test_golden_metrics.py --regen
+
+and include the diff of tests/golden/metrics.json in the PR so the
+drift is reviewable.
+"""
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.core import solver, timeslot, topology, traffic
+
+GOLDEN_PATH = pathlib.Path(__file__).parent / "golden" / "metrics.json"
+RTOL = 1e-4
+
+# the pinned grid — small enough to solve tightly in seconds, spanning
+# an electronic DCN and the AWGR PON cell plus both objectives
+GRID = [(topo, obj)
+        for topo in ("spine-leaf", "pon3")
+        for obj in ("energy", "time")]
+SEED = 0
+PATTERN = dict(n_map=4, n_reduce=3, total_gbits=8.0)
+
+
+def _problem(topo_name: str) -> timeslot.ScheduleProblem:
+    topo = topology.build(topo_name)
+    cf = traffic.generate(topo, traffic.pattern("uniform", **PATTERN), SEED)
+    return timeslot.ScheduleProblem(
+        topo, cf, n_slots=timeslot.suggest_n_slots(topo, cf), path_slack=2)
+
+
+def _solve(topo_name: str, objective: str, backend: str) -> dict:
+    r = solver.solve_fast(_problem(topo_name), objective, backend=backend)
+    m = r.metrics
+    return {"energy_j": float(m.energy_j),
+            "completion_s": float(m.completion_s),
+            "fairness_term": float(m.fairness_term),
+            "served_gbits": float(m.served.sum()),
+            "feasible": bool(m.feasible)}
+
+
+def _golden() -> dict:
+    with open(GOLDEN_PATH) as fh:
+        return json.load(fh)
+
+
+@pytest.mark.parametrize("backend", solver.BACKENDS)
+@pytest.mark.parametrize("topo_name,objective", GRID)
+def test_golden_metrics(topo_name, objective, backend):
+    want = _golden()[f"{topo_name}/min-{objective}/seed{SEED}"]
+    got = _solve(topo_name, objective, backend)
+    assert got["feasible"] and want["feasible"]
+    for key in ("energy_j", "completion_s", "fairness_term",
+                "served_gbits"):
+        np.testing.assert_allclose(
+            got[key], want[key], rtol=RTOL, atol=1e-9,
+            err_msg=f"{topo_name}/min-{objective}[{backend}] {key} drifted "
+                    f"from tests/golden/metrics.json (regen only if the "
+                    f"change is intentional)")
+
+
+def _regen() -> None:
+    doc = {f"{t}/min-{o}/seed{SEED}": _solve(t, o, "xla") for t, o in GRID}
+    GOLDEN_PATH.parent.mkdir(parents=True, exist_ok=True)
+    GOLDEN_PATH.write_text(json.dumps(doc, indent=1, sort_keys=True) + "\n")
+    print(f"wrote {GOLDEN_PATH}")
+    for k, v in doc.items():
+        print(f"  {k}: E={v['energy_j']:.4f} J  M={v['completion_s']:.6f} s")
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--regen", action="store_true",
+                    help="rewrite tests/golden/metrics.json from the "
+                         "current xla-backend solver")
+    if ap.parse_args().regen:
+        _regen()
+    else:
+        ap.error("pass --regen to rewrite the golden fixture")

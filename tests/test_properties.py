@@ -1,0 +1,204 @@
+"""Property-based solver-stack invariants (plus the degenerate cases
+they surfaced).
+
+Each property is a plain checker over an RNG so it runs in two modes:
+
+  * a seeded deterministic sweep (always on — the tier-1 suite must
+    exercise these without optional deps);
+  * a hypothesis-driven sweep over the same checkers when hypothesis is
+    installed (requirements-dev.txt; CI runs it).
+
+Invariants pinned here:
+
+  1. ell_pack -> ell_spmv equals the dense matvec (both gather
+     directions) on random sparsity patterns;
+  2. path_decompose conserves per-flow volume exactly — decomposed
+     path volumes per flow sum to the flow's demand;
+  3. evaluate's aggregate metrics are invariant under a flow-order
+     permutation of the CoflowSet (and `served` permutes with it);
+  4. a zero-flow CoflowSet (an empty arrival epoch) flows through
+     build_routing_lp / solve_fast / evaluate as empty-but-valid
+     results instead of raising, on both backends.
+"""
+import numpy as np
+import pytest
+
+from repro.core import solver, timeslot, topology, traffic
+from repro.kernels import pdhg_spmv, ref
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                      # pragma: no cover - dev extra
+    HAVE_HYPOTHESIS = False
+
+needs_hypothesis = pytest.mark.skipif(
+    not HAVE_HYPOTHESIS,
+    reason="hypothesis sweeps need hypothesis (requirements-dev.txt)")
+
+TOPOS = ("spine-leaf", "pon3")
+
+
+# ---------------------------------------------------------------------------
+# property checkers (seed -> assertions)
+# ---------------------------------------------------------------------------
+
+def check_ell_spmv_matches_dense(seed: int) -> None:
+    rng = np.random.default_rng(seed)
+    m = int(rng.integers(1, 50))
+    n = int(rng.integers(1, 40))
+    nnz = int(rng.integers(0, m * n + 1))
+    flat = rng.choice(m * n, size=nnz, replace=False)
+    row, col = flat // n, flat % n
+    val = rng.normal(size=nnz)
+    op = pdhg_spmv.ell_pack(row, col, val, m, n)
+    K = np.zeros((m, n), np.float32)
+    np.add.at(K, (row, col), val.astype(np.float32))
+    x = rng.normal(size=n).astype(np.float32)
+    y = rng.normal(size=m).astype(np.float32)
+    kx = np.asarray(ref.ell_spmv(np.pad(x, (0, op.n_pad - n)), op.rows))
+    kty = np.asarray(ref.ell_spmv(np.pad(y, (0, op.m_pad - m)), op.cols))
+    np.testing.assert_allclose(kx[:m], K @ x, atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(kty[:n], K.T @ y, atol=1e-4, rtol=1e-4)
+    assert np.all(kx[m:] == 0.0) and np.all(kty[n:] == 0.0)
+
+
+def _random_problem(rng: np.random.Generator,
+                    topo_name: str) -> timeslot.ScheduleProblem:
+    topo = topology.build(topo_name)
+    pat = traffic.TrafficPattern(
+        "prop", placement=str(rng.choice(traffic.PLACEMENTS)),
+        skew=str(rng.choice(traffic.SKEWS)),
+        n_map=int(rng.integers(2, 5)), n_reduce=int(rng.integers(2, 4)),
+        total_gbits=float(rng.uniform(2.0, 10.0)))
+    cf = traffic.generate(topo, pat, int(rng.integers(0, 2**31 - 1)))
+    return timeslot.ScheduleProblem(
+        topo, cf, n_slots=timeslot.suggest_n_slots(topo, cf), path_slack=2)
+
+
+def check_path_decompose_conserves_volume(seed: int) -> None:
+    rng = np.random.default_rng(seed)
+    p = _random_problem(rng, str(rng.choice(TOPOS)))
+    lp, idx = solver.build_routing_lp(p, "energy")
+    res = solver.solve_lp(lp, iters=400, max_restarts=0)   # coarse on purpose
+    K = len(idx.kf)
+    paths = solver.path_decompose(p, idx, np.maximum(res.x[:K], 0.0))
+    by_flow = np.zeros(p.coflow.n_flows)
+    for fp in paths:
+        assert fp.volume > 0.0
+        # every path is a src->dst chain of admissible triples
+        e = idx.ke[fp.triples]
+        assert int(p.e_src[e[0]]) == int(p.coflow.src[fp.flow])
+        assert int(p.e_dst[e[-1]]) == int(p.coflow.dst[fp.flow])
+        np.testing.assert_array_equal(p.e_dst[e[:-1]], p.e_src[e[1:]])
+        by_flow[fp.flow] += fp.volume
+    # exact conservation: decomposition re-assigns the full demand even
+    # from a sloppy LP iterate (healthy topology => a route exists)
+    np.testing.assert_allclose(by_flow, p.coflow.size, atol=1e-6)
+
+
+def check_evaluate_permutation_invariant(seed: int) -> None:
+    rng = np.random.default_rng(seed)
+    p = _random_problem(rng, str(rng.choice(TOPOS)))
+    F, E, W, T = p.shape_x
+    # arbitrary (not necessarily feasible) schedule: evaluate must score
+    # the permuted instance identically, violations included
+    x = np.where(rng.random((F, E, W, T)) < 0.1,
+                 rng.uniform(0.0, 2.0, (F, E, W, T)), 0.0)
+    m0 = timeslot.evaluate(p, x)
+    perm = rng.permutation(F)
+    cfp = traffic.CoflowSet(p.coflow.src[perm], p.coflow.dst[perm],
+                            p.coflow.size[perm], p.coflow.n_vertices)
+    pp = timeslot.ScheduleProblem(p.topo, cfp, n_slots=T, rho=p.rho,
+                                  path_slack=p.path_slack)
+    m1 = timeslot.evaluate(pp, x[perm])
+    assert np.isclose(m0.energy_j, m1.energy_j, rtol=1e-9)
+    assert np.isclose(m0.completion_s, m1.completion_s, rtol=1e-9)
+    assert np.isclose(m0.fairness_term, m1.fairness_term, rtol=1e-9)
+    assert np.isclose(m0.max_violation, m1.max_violation, rtol=1e-9,
+                      atol=1e-12)
+    assert m0.feasible == m1.feasible
+    np.testing.assert_allclose(m0.served[perm], m1.served, rtol=1e-9,
+                               atol=1e-12)
+    np.testing.assert_allclose(m0.psi, m1.psi, rtol=1e-9, atol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# seeded deterministic sweeps (always run)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(8))
+def test_ell_spmv_matches_dense(seed):
+    check_ell_spmv_matches_dense(seed)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_path_decompose_conserves_volume(seed):
+    check_path_decompose_conserves_volume(seed)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_evaluate_permutation_invariant(seed):
+    check_evaluate_permutation_invariant(seed)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis sweeps (same checkers, fuzzed seeds)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    seeds = st.integers(min_value=0, max_value=2**31 - 1)
+
+    @needs_hypothesis
+    @settings(max_examples=25, deadline=None)
+    @given(seed=seeds)
+    def test_ell_spmv_matches_dense_hyp(seed):
+        check_ell_spmv_matches_dense(seed)
+
+    @needs_hypothesis
+    @settings(max_examples=8, deadline=None)
+    @given(seed=seeds)
+    def test_path_decompose_conserves_volume_hyp(seed):
+        check_path_decompose_conserves_volume(seed)
+
+    @needs_hypothesis
+    @settings(max_examples=8, deadline=None)
+    @given(seed=seeds)
+    def test_evaluate_permutation_invariant_hyp(seed):
+        check_evaluate_permutation_invariant(seed)
+
+
+# ---------------------------------------------------------------------------
+# degenerate instances the property sweeps surfaced: zero-flow co-flows
+# (empty arrival epochs) must produce empty-but-valid results
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("objective", ["energy", "time"])
+@pytest.mark.parametrize("backend", solver.BACKENDS)
+def test_zero_flow_coflow_solves(objective, backend):
+    topo = topology.build("spine-leaf")
+    cf = traffic.empty_coflow(topo.n_vertices)
+    p = timeslot.ScheduleProblem(
+        topo, cf, n_slots=timeslot.suggest_n_slots(topo, cf))
+    lp, idx = solver.build_routing_lp(p, objective)
+    assert len(idx.kf) == 0 and lp.m == 0
+    r = solver.solve_fast(p, objective, backend=backend)
+    assert r.schedule.shape == p.shape_x
+    assert r.schedule.size == 0 and r.remaining_gbits == 0.0
+    m = r.metrics
+    assert m.feasible and m.energy_j == 0.0 and m.completion_s == 0.0
+
+
+def test_zero_flow_coflow_evaluate_and_batch():
+    topo = topology.build("spine-leaf")
+    cf = traffic.empty_coflow(topo.n_vertices)
+    p = timeslot.ScheduleProblem(topo, cf, n_slots=2)
+    m = timeslot.evaluate(p, np.zeros(p.shape_x))
+    assert m.feasible and m.served.shape == (0,)
+    # an empty member must not poison a stacked batch
+    p_real = _random_problem(np.random.default_rng(0), "spine-leaf")
+    res = solver.solve_fast_batch([p, p], "energy")
+    assert all(r.metrics.feasible for r in res)
+    mixed = solver.solve_fast_ensemble([p_real, p], "energy", iters=2000)
+    assert mixed[1].metrics.energy_j == 0.0
+    assert mixed[0].metrics.feasible
