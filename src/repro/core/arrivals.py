@@ -42,7 +42,8 @@ import zlib
 import numpy as np
 
 from . import solver
-from .timeslot import TOL, ScheduleProblem, prefix_energy, suggest_n_slots
+from .timeslot import (TOL, ScheduleProblem, prefix_energy, rehorizon,
+                       suggest_n_slots)
 from .topology import Topology
 from .traffic import CoflowSet, TrafficPattern, generate
 
@@ -333,9 +334,11 @@ def run_online(topo: Topology, trace: list[Arrival],
         tries = 0
         while (r.remaining_gbits > 1e-6 or not r.metrics.feasible) \
                 and tries < 2 and len(src) > 0:
-            p = ScheduleProblem(topo, cf, n_slots=2 * p.n_slots, rho=rho,
-                                q_weight=q_weight,
-                                path_slack=path_slack if tries == 0 else None)
+            # rehorizon shares the derived arrays (and the cached LP
+            # structure) with the epoch problem; only the final pruning-
+            # drop retry rebuilds from scratch
+            p = rehorizon(p, 2 * p.n_slots,
+                          path_slack=path_slack if tries == 0 else None)
             r = solver.solve_fast_warm(p, objective, iters=iters, tol=tol,
                                        chunk=chunk, backend=backend)
             spent += r.iterations

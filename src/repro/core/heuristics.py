@@ -26,18 +26,23 @@ from .timeslot import ScheduleProblem
 def _shortest_paths(p: ScheduleProblem):
     """Per flow: BFS shortest admissible path (hop count), as triple lists
     compatible with the wavelength-continuity rules."""
-    from .solver import FlowPath, RoutingIndex, _admissible, path_decompose
+    from .solver import FlowPath, RoutingIndex, _admissible, _out_edges
     kf, ke, kw = _admissible(p)
     passive = ~(p.is_server | p.is_switch)
     E, W = p.topo.n_edges, p.topo.n_wavelengths
-    out_edges = [[] for _ in range(p.topo.n_vertices)]
-    for e in range(E):
-        out_edges[int(p.e_src[e])].append(e)
-    k_of = {(int(kf[i]), int(ke[i]), int(kw[i])): i for i in range(len(kf))}
-    adm = {(int(kf[i]), int(ke[i]), int(kw[i])) for i in range(len(kf))}
+    out_edges = _out_edges(p)                 # memoized per topology
+    F = p.coflow.n_flows
+    # kf is sorted (lexicographic triples): each flow owns one contiguous
+    # slice; a dense (E, W) scratch map replaces the historical
+    # (f, e, w)-keyed admissibility set / triple-lookup dicts
+    bounds = np.searchsorted(kf, np.arange(F + 1))
+    k_map = np.full((E, W), -1, dtype=np.int64)
 
     paths = []
-    for f in range(p.coflow.n_flows):
+    for f in range(F):
+        lo, hi = bounds[f], bounds[f + 1]
+        es, ws = ke[lo:hi], kw[lo:hi]
+        k_map[es, ws] = np.arange(lo, hi)
         src, dst = int(p.coflow.src[f]), int(p.coflow.dst[f])
         # BFS over (vertex, wavelength-in) states; deque gives O(1)
         # popleft (a list's pop(0) is O(queue) per visit, O(states^2) total)
@@ -52,7 +57,7 @@ def _shortest_paths(p: ScheduleProblem):
                 for w in range(W):
                     if not convert and w != w_in:
                         continue
-                    if (f, e, w) not in adm:
+                    if k_map[e, w] < 0:
                         continue
                     v = int(p.e_dst[e])
                     state = (v, w)
@@ -74,9 +79,10 @@ def _shortest_paths(p: ScheduleProblem):
             trail.append((e, w))
             st = pst
         trail.reverse()
-        triples = np.array([k_of[(f, e, w)] for e, w in trail], np.int64)
+        triples = np.array([k_map[e, w] for e, w in trail], np.int64)
         paths.append(FlowPath(f, triples, float(p.coflow.size[f]),
                               int(trail[0][1])))
+        k_map[es, ws] = -1            # reset scratch for the next flow
     return RoutingIndex(kf, ke, kw, 0, 0), paths
 
 

@@ -30,6 +30,15 @@ volume, duals map row-by-row — and `resolve_incremental` /
 `solve_fast_ensemble(warm=...)` restart PDHG from that state instead of
 from zero.
 
+Problem construction is itself a fast path (docs/SOLVER.md §8): LP
+assembly is vectorized index arithmetic, constraint sparsity and
+RoutingIndex are cached across solves keyed by a structure hash
+(ProblemStructure; arrival epochs, horizon retries, and scaled
+degradations rebuild nothing — build_cache_stats() counts hits), the
+blocked-ELL layout is plan-cached per sparsity pattern, and batched/
+warm dispatches are padded onto shape buckets so compiled executables
+are reused across grid cells instead of recompiled per exact shape.
+
 Units follow the paper throughout: flow sizes and shipped volumes in
 Gbits, link/egress/ingress rates in Gbps, slot duration and completion
 time in seconds, energy in Joules.
@@ -38,6 +47,8 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import hashlib
+import time
 from typing import Callable
 
 import jax
@@ -197,6 +208,35 @@ def _solve_lp_trivial(lp: StructuredLP) -> PDHGResult:
     return PDHGResult(x, 0.0, 0.0, 0, y=np.zeros(lp.m))
 
 
+def _ell_operator_cached(row, col, val, m, n):
+    """Blocked-ELL pack with the layout plan cached per sparsity pattern.
+
+    The plan (stable argsort, per-block widths, gather indices) depends
+    only on (row, col, m, n); re-solves over an unchanged structure —
+    arrival epochs, scaled degradations, warm restarts — refresh the
+    coefficient values in O(nnz) instead of re-packing (`ell_fill`).
+    Keyed by a content digest, so equal patterns hit regardless of which
+    problem object produced them; counters land in BUILD_STATS."""
+    from repro.kernels import pdhg_spmv
+
+    key = (m, n, len(val),
+           hashlib.blake2b(np.ascontiguousarray(row).tobytes()
+                           + np.ascontiguousarray(col).tobytes(),
+                           digest_size=16).digest())
+    plan = _ELL_PLAN_CACHE.get(key)
+    if plan is None:
+        t0 = time.perf_counter()
+        plan = pdhg_spmv.ell_plan(row, col, m, n)
+        BUILD_STATS.ell_misses += 1
+        BUILD_STATS.ell_s += time.perf_counter() - t0
+        if len(_ELL_PLAN_CACHE) >= _ELL_PLAN_CACHE_MAX:
+            _ELL_PLAN_CACHE.pop(next(iter(_ELL_PLAN_CACHE)))
+        _ELL_PLAN_CACHE[key] = plan
+    else:
+        BUILD_STATS.ell_hits += 1
+    return pdhg_spmv.ell_fill(plan, val)
+
+
 def _pack_pallas(c, row, col, val, b, h, xmax, m_eq):
     """Pack one (already max-normalized, xmax-clamped) LP for the Pallas
     kernels: blocked-ELL tables for both SpMV directions plus the
@@ -207,10 +247,8 @@ def _pack_pallas(c, row, col, val, b, h, xmax, m_eq):
     The tau/sig/q/ub formulas are a numpy mirror of _pdhg_ops (which
     builds them in-trace from the COO arrays) — keep the two in
     lockstep."""
-    from repro.kernels import pdhg_spmv
-
     n, m = len(c), len(b) + len(h)
-    op = pdhg_spmv.ell_pack(row, col, val, m, n)
+    op = _ell_operator_cached(row, col, val, m, n)
     q = np.concatenate([b, h])
     abs_val = np.abs(val)
     col_sum = np.zeros(n)
@@ -287,6 +325,12 @@ def _pdhg_run_adaptive(c, row, col, val, b, h, xmax, x0, y0, tols,
     per doubling and pays a host round-trip per restart) with a single
     dispatch of near-minimal total iterations.
 
+    Coordinates may be storage-padded (shape bucketing, see
+    _pad_for_buckets): `inst_n`/`inst_m` map padded slots to the dump
+    segment `num_inst`, which is always treated as frozen and sliced off
+    the residual vector — identical semantics to kernels.ops'
+    pdhg_adaptive.
+
     Returns (x, y, per-instance residuals, per-instance chunks used)."""
     q, tau, sig, Kx, KTy, ub_mask = _pdhg_ops(c, row, col, val, b, h,
                                               m, n, m_eq)
@@ -294,11 +338,13 @@ def _pdhg_run_adaptive(c, row, col, val, b, h, xmax, x0, y0, tols,
     def residuals(x):
         r = Kx(x) - q
         worst = jnp.where(ub_mask, jnp.maximum(r, 0.0), jnp.abs(r))
-        return jax.ops.segment_max(worst, inst_m, num_segments=num_inst)
+        return jax.ops.segment_max(worst, inst_m,
+                                   num_segments=num_inst + 1)[:num_inst]
 
     def burst(x, y, frozen):
-        keep_n = frozen[inst_n]
-        keep_m = frozen[inst_m]
+        frozen_ext = jnp.concatenate([frozen, jnp.ones((1,), bool)])
+        keep_n = frozen_ext[inst_n]
+        keep_m = frozen_ext[inst_m]
 
         def body(_, state):
             x, y = state
@@ -405,6 +451,18 @@ class RoutingIndex:
 
 
 def _admissible(p: ScheduleProblem):
+    """Admissible (flow, edge, wavelength) triples, lexicographic (f, e, w)
+    order — one vectorized nonzero over flow_edge_mask x edge_w_ok (the
+    same triples, in the same order, the historical per-flow Python loop
+    emitted; `_admissible_loops` keeps that loop as the pinned reference)."""
+    adm = p.flow_edge_mask[:, :, None] & p.edge_w_ok[None, :, :]
+    kf, ke, kw = np.nonzero(adm)
+    return kf.astype(np.int64), ke.astype(np.int64), kw.astype(np.int64)
+
+
+def _admissible_loops(p: ScheduleProblem):
+    """Pre-vectorization reference implementation of `_admissible` (kept
+    for the equivalence tests and benchmarks/build_bench.py's baseline)."""
     F, E, W, _ = p.shape_x
     trip_f, trip_e, trip_w = [], [], []
     for f in range(F):
@@ -423,13 +481,364 @@ def _admissible(p: ScheduleProblem):
     return kf, ke, kw
 
 
-def build_routing_lp(p: ScheduleProblem, objective: str) -> tuple[StructuredLP, RoutingIndex]:
+def _rank_by_first_use(codes: np.ndarray):
+    """Rank the distinct values of `codes` by first appearance.
+
+    Returns (rank_of_each_entry, codes_in_rank_order).  This is the
+    vectorized equivalent of the historical row-allocation dicts: a row
+    keyed by `codes[i]` gets the id a Python dict populated on first
+    touch would have assigned, so the vectorized assembly reproduces the
+    loop builder's row numbering exactly."""
+    if len(codes) == 0:
+        z = np.zeros(0, dtype=np.int64)
+        return z, z.copy()
+    uniq, first, inv = np.unique(codes, return_index=True,
+                                 return_inverse=True)
+    order = np.argsort(first, kind="stable")
+    rank = np.empty(len(uniq), dtype=np.int64)
+    rank[order] = np.arange(len(uniq))
+    return rank[inv], uniq[order]
+
+
+def _ub_block(row0: int, rank: np.ndarray, cols_k: np.ndarray,
+              n_theta: int, i_theta: int):
+    """COO entries of one inequality-row family (link cap / egress /
+    ingress): per entry its row `row0 + rank` and column `cols_k`, with
+    — when minimizing time — a theta coupling entry interleaved at each
+    row's first occurrence, exactly where the loop builder's lazy
+    `ub_row` emitted it.  Returns (rows, cols, vals, theta_positions);
+    theta coefficient slots hold 0.0 and are refreshed from the current
+    capacity limits by `_fill_lp`."""
+    L = len(rank)
+    if not n_theta:
+        return (row0 + rank, cols_k, np.ones(L),
+                np.zeros(0, dtype=np.int64))
+    first = np.zeros(L, dtype=bool)
+    if L:
+        first[np.unique(rank, return_index=True)[1]] = True
+    pos_own = np.arange(L, dtype=np.int64) + np.cumsum(first)
+    total = L + int(first.sum())
+    rows = np.empty(total, dtype=np.int64)
+    cols = np.empty(total, dtype=np.int64)
+    vals = np.ones(total)
+    rows[pos_own] = row0 + rank
+    cols[pos_own] = cols_k
+    pos_theta = pos_own[first] - 1
+    rows[pos_theta] = row0 + rank[first]
+    cols[pos_theta] = i_theta
+    vals[pos_theta] = 0.0
+    return rows, cols, vals, pos_theta
+
+
+def _device_cost_per_gbit(p: ScheduleProblem) -> np.ndarray:
+    """(V,) surrogate device-power cost per Gbit (the energy objective's
+    `p_max / incident_capacity` term), memoized on the topology object —
+    it depends only on the topology's capacities and device powers, and
+    sweeps build hundreds of problems over the same handful of graphs
+    (degraded topologies are fresh objects, so they get fresh caches)."""
+    t = p.topo
+    cached = getattr(t, "_device_cost_cache", None)
+    if cached is not None:
+        return cached
+    out = np.zeros(t.n_vertices)
+    for vert in range(t.n_vertices):
+        if p.p_max[vert] > 0:
+            inc = t.cap[p.e_src == vert].sum() + t.cap[p.e_dst == vert].sum()
+            out[vert] = p.p_max[vert] / max(float(inc), 1e-9)
+    t._device_cost_cache = out
+    return out
+
+
+@dataclasses.dataclass
+class ProblemStructure:
+    """Everything about a routing LP that does not depend on capacity,
+    demand, or horizon *values*: the admissible triples, the COO
+    sparsity pattern with its constant +/-1 coefficients, the row
+    identities, and the gather indices `_fill_lp` needs to refresh the
+    value-dependent arrays (c, b, h, xmax, theta coefficients) in
+    O(nnz).  Cached across solves keyed by `_structure_key` — arrival
+    epochs re-solving the same merged co-flow set, brown-out/scaled
+    degradations (cap pattern preserved), and horizon-doubling retries
+    all reuse one entry and skip the assembly entirely."""
+
+    idx: RoutingIndex
+    n: int
+    K: int
+    n_cons: int               # conservation equality rows
+    m_eq: int
+    m: int
+    n_theta: int
+    row: np.ndarray           # COO rows (shared, treat as read-only)
+    col: np.ndarray
+    val_base: np.ndarray      # constant coefficients; theta slots hold 0
+    theta_pos: np.ndarray     # COO positions of theta coefficients
+    ew_e: np.ndarray          # per link-cap row (rank order): edge
+    ew_w: np.ndarray          # ... and wavelength
+    n_srv: int                # server-egress rows
+    sw_verts: np.ndarray      # per switch-ingress row: vertex
+
+
+@dataclasses.dataclass
+class BuildCacheStats:
+    """Counters for the problem-construction fast path (structure cache
+    + blocked-ELL plan cache).  Read via `build_cache_stats()`, cleared
+    via `reset_build_caches()`; `python -m repro.sweep --profile` prints
+    per-cell deltas."""
+
+    structure_hits: int = 0
+    structure_misses: int = 0
+    structure_s: float = 0.0      # seconds spent building structures
+    fill_s: float = 0.0           # seconds refreshing value arrays
+    ell_hits: int = 0
+    ell_misses: int = 0
+    ell_s: float = 0.0            # seconds building blocked-ELL plans
+
+    def snapshot(self) -> "BuildCacheStats":
+        return dataclasses.replace(self)
+
+
+BUILD_STATS = BuildCacheStats()
+_STRUCTURE_CACHE: dict = {}
+_STRUCTURE_CACHE_MAX = 256
+_ELL_PLAN_CACHE: dict = {}
+_ELL_PLAN_CACHE_MAX = 256
+
+
+def build_cache_stats() -> BuildCacheStats:
+    """The live build-path cache counters (see BuildCacheStats)."""
+    return BUILD_STATS
+
+
+def reset_build_caches() -> None:
+    """Drop the structure and ELL-plan caches and zero the counters."""
+    _STRUCTURE_CACHE.clear()
+    _ELL_PLAN_CACHE.clear()
+    for f in dataclasses.fields(BuildCacheStats):
+        setattr(BUILD_STATS, f.name, f.default)
+
+
+def _structure_key(p: ScheduleProblem, objective: str) -> tuple:
+    """Hashable identity of a routing LP's *structure*.
+
+    Two problems share a ProblemStructure iff every array that shapes
+    the sparsity pattern matches: the edge list, the admissibility
+    masks (flow_edge_mask already folds in endpoints, path_slack and
+    degraded reachability; edge_w_ok is the cap > 0 pattern), vertex
+    kinds, and which rate limits are finite.  Capacity/demand/horizon
+    VALUES are deliberately excluded — they only feed `_fill_lp`."""
+    t = p.topo
+    hh = hashlib.blake2b(digest_size=16)
+    for a in (t.edges, p.edge_w_ok, p.flow_edge_mask, p.coflow.src,
+              p.coflow.dst, p.is_server, p.is_switch,
+              np.isfinite(p.sigma)):
+        hh.update(np.ascontiguousarray(a).tobytes())
+    hh.update(b"rho-finite" if np.isfinite(p.rho) else b"rho-inf")
+    return (objective, t.n_vertices, t.n_edges, t.n_wavelengths,
+            p.coflow.n_flows, hh.hexdigest())
+
+
+def _build_structure(p: ScheduleProblem, objective: str) -> ProblemStructure:
+    """Vectorized assembly of the value-independent LP skeleton.
+
+    Pure index arithmetic — no per-row Python closures, no (f, e, w)
+    dict keys.  Row numbering and COO entry order reproduce the loop
+    builder (`_build_routing_lp_loops`) bit-for-bit: rows are ranked by
+    first use (`_rank_by_first_use` mirrors the lazy row-allocation
+    dicts) and entries are emitted in the same stream order
+    (conservation interleaved per triple, injections, demand, then the
+    three inequality families with theta couplings at row creation)."""
+    F, E, W, _ = p.shape_x
+    V = p.topo.n_vertices
+    kf, ke, kw = _admissible(p)
+    K = len(kf)
+    n_inj = F * W
+    n_theta = 1 if objective == "time" else 0
+    n = K + n_inj + n_theta
+    i_theta = n - 1
+    passive = ~(p.is_server | p.is_switch)
+    src = p.coflow.src.astype(np.int64)
+    dst = p.coflow.dst.astype(np.int64)
+    u, v = p.e_src[ke], p.e_dst[ke]
+
+    # --- equality rows ----------------------------------------------------
+    # conservation rows keyed ("c", f, vertex, w | -1): per-wavelength at
+    # passive vertices, wavelength-summed at electronic ones.  The stream
+    # is [u-entry, v-entry] per triple (dst rows skipped — implied), then
+    # the injection entries; first use allocates the row.
+    stride = np.int64(W + 1)
+    codes2 = np.empty(2 * K, dtype=np.int64)
+    codes2[0::2] = (kf * V + u) * stride + np.where(passive[u], kw, -1) + 1
+    codes2[1::2] = (kf * V + v) * stride + np.where(passive[v], kw, -1) + 1
+    valid2 = np.empty(2 * K, dtype=bool)
+    valid2[0::2] = u != dst[kf]          # never False (masked), keep guard
+    valid2[1::2] = v != dst[kf]
+    cols2 = np.repeat(np.arange(K, dtype=np.int64), 2)
+    vals2 = np.tile(np.array([1.0, -1.0]), K)
+
+    finj = np.repeat(np.arange(F, dtype=np.int64), W)
+    winj = np.tile(np.arange(W, dtype=np.int64), F)
+    sv = src[finj]
+    inj_codes = (finj * V + sv) * stride + np.where(passive[sv], winj, -1) + 1
+
+    stream = np.concatenate([codes2[valid2], inj_codes])
+    row_ids, cons_codes = _rank_by_first_use(stream)
+    n_cons = len(cons_codes)
+    m_eq = n_cons + F
+
+    inj_cols = K + np.arange(n_inj, dtype=np.int64)
+    rows_eq = np.concatenate([
+        row_ids, np.repeat(n_cons + np.arange(F, dtype=np.int64), W)])
+    cols_eq = np.concatenate([cols2[valid2], inj_cols, inj_cols])
+    vals_eq = np.concatenate([vals2[valid2], np.full(n_inj, -1.0),
+                              np.full(n_inj, 1.0)])
+
+    w_eff = cons_codes % stride - 1
+    rest = cons_codes // stride
+    eq_keys = [("c", int(f_), int(vt), int(w_))
+               for f_, vt, w_ in zip(rest // V, rest % V, w_eff)]
+    eq_keys += [("d", f_) for f_ in range(F)]
+
+    # --- inequality rows --------------------------------------------------
+    # shared capacity per (e, w)
+    ew_rank, ew_uniq = _rank_by_first_use(ke * W + kw)
+    n_ew = len(ew_uniq)
+    ew_e, ew_w = ew_uniq // W, ew_uniq % W
+    rows_ew, cols_ew, vals_ew, theta_ew = _ub_block(
+        m_eq, ew_rank, np.arange(K, dtype=np.int64), n_theta, i_theta)
+
+    # server egress rate
+    if np.isfinite(p.rho):
+        srv_k = np.flatnonzero(p.is_server[u])
+        srv_rank, srv_uniq = _rank_by_first_use(u[srv_k])
+    else:
+        srv_k = np.zeros(0, dtype=np.int64)
+        srv_rank, srv_uniq = _rank_by_first_use(srv_k)
+    n_srv = len(srv_uniq)
+    rows_srv, cols_srv, vals_srv, theta_srv = _ub_block(
+        m_eq + n_ew, srv_rank, srv_k, n_theta, i_theta)
+
+    # switch ingress rate
+    sw_k = np.flatnonzero(p.is_switch[v] & np.isfinite(p.sigma[v]))
+    sw_rank, sw_uniq = _rank_by_first_use(v[sw_k])
+    rows_sw, cols_sw, vals_sw, theta_sw = _ub_block(
+        m_eq + n_ew + n_srv, sw_rank, sw_k, n_theta, i_theta)
+
+    ub_keys = [("ew", int(e), int(w_)) for e, w_ in zip(ew_e, ew_w)]
+    ub_keys += [("srv", int(x)) for x in srv_uniq]
+    ub_keys += [("sw", int(x)) for x in sw_uniq]
+
+    row = np.concatenate([rows_eq, rows_ew, rows_srv, rows_sw])
+    col = np.concatenate([cols_eq, cols_ew, cols_srv, cols_sw])
+    val_base = np.concatenate([vals_eq, vals_ew, vals_srv, vals_sw])
+    off_ew = len(rows_eq)
+    off_srv = off_ew + len(rows_ew)
+    off_sw = off_srv + len(rows_srv)
+    theta_pos = np.concatenate([off_ew + theta_ew, off_srv + theta_srv,
+                                off_sw + theta_sw])
+
+    idx = RoutingIndex(kf, ke, kw, n_inj, n_theta,
+                       eq_keys=eq_keys, ub_keys=ub_keys)
+    return ProblemStructure(
+        idx=idx, n=n, K=K, n_cons=n_cons, m_eq=m_eq,
+        m=m_eq + n_ew + n_srv + len(sw_uniq), n_theta=n_theta,
+        row=row, col=col, val_base=val_base, theta_pos=theta_pos,
+        ew_e=ew_e, ew_w=ew_w, n_srv=n_srv, sw_verts=sw_uniq)
+
+
+def _fill_lp(st: ProblemStructure, p: ScheduleProblem) -> StructuredLP:
+    """Refresh a cached structure's value arrays from the current problem:
+    capacities/rates (h, theta coefficients, xmax), demand (b, xmax) and
+    the objective vector.  O(nnz) gathers — no Python per-row work."""
+    F, E, W, T = p.shape_x
+    horizon = T * p.topo.slot_duration
+    kf, ke, kw = st.idx.kf, st.idx.ke, st.idx.kw
+    K = st.K
+    cap = p.topo.cap
+    size = p.coflow.size.astype(np.float64)
+    total = max(p.coflow.total_gbits, 1e-9)
+
+    limits = np.concatenate([cap[st.ew_e, st.ew_w],
+                             np.full(st.n_srv, p.rho),
+                             p.sigma[st.sw_verts]])
+    if st.n_theta:
+        h = np.zeros(len(limits))
+        val = st.val_base.copy()
+        val[st.theta_pos] = -limits
+    else:
+        h = limits * horizon
+        val = st.val_base          # fully constant; shared, read-only
+
+    b = np.concatenate([np.zeros(st.n_cons), size])
+
+    c = np.zeros(st.n)
+    if st.n_theta:
+        c[st.n - 1] = 1.0
+        c[:K] += 1e-6 / total          # cycle/path-length regularizer
+    else:
+        # exact NIC J/Gbit + surrogate device-power-per-Gbit terms, same
+        # accumulation order as the loop builder (bit-for-bit)
+        contrib = _device_cost_per_gbit(p)
+        u, v = p.e_src[ke], p.e_dst[ke]
+        eps_u = np.where(p.is_server[u], p.eps[u], 0.0)
+        eps_v = np.where(p.is_server[v], p.eps[v], 0.0)
+        c[:K] = (eps_u + eps_v) + (contrib[u] + contrib[v]) + 1e-6
+
+    xmax = np.full(st.n, np.inf)
+    xmax[:K] = np.minimum(cap[ke, kw] * horizon, total)
+    xmax[K:K + F * W] = np.repeat(size, W)
+    if st.n_theta:
+        xmax[st.n - 1] = horizon
+    return StructuredLP(c=c, row=st.row, col=st.col, val=val,
+                        b=b, h=h, xmax=xmax)
+
+
+def build_routing_lp(p: ScheduleProblem, objective: str, *,
+                     cache: bool = True
+                     ) -> tuple[StructuredLP, RoutingIndex]:
+    """Assemble the routing LP (see docs/SOLVER.md §1 and §8).
+
+    Vectorized fast path: the value-independent skeleton (sparsity
+    pattern, row numbering, RoutingIndex) is built once per structure
+    and cached across solves keyed by `_structure_key`; only the value
+    arrays (c, b, h, xmax, theta coefficients) are refreshed per call.
+    `cache=False` rebuilds the skeleton unconditionally (equivalence
+    tests; the arrays produced are identical either way).  The returned
+    row/col/kf/ke/kw arrays are shared with the cache — treat them as
+    read-only."""
+    assert objective in ("energy", "time")
+    key = _structure_key(p, objective) if cache else None
+    st = _STRUCTURE_CACHE.get(key) if cache else None
+    if st is None:
+        t0 = time.perf_counter()
+        st = _build_structure(p, objective)
+        BUILD_STATS.structure_misses += 1
+        BUILD_STATS.structure_s += time.perf_counter() - t0
+        if cache:
+            if len(_STRUCTURE_CACHE) >= _STRUCTURE_CACHE_MAX:
+                _STRUCTURE_CACHE.pop(next(iter(_STRUCTURE_CACHE)))
+            _STRUCTURE_CACHE[key] = st
+    else:
+        BUILD_STATS.structure_hits += 1
+    t0 = time.perf_counter()
+    lp = _fill_lp(st, p)
+    BUILD_STATS.fill_s += time.perf_counter() - t0
+    return lp, st.idx
+
+
+def _build_routing_lp_loops(p: ScheduleProblem, objective: str
+                            ) -> tuple[StructuredLP, RoutingIndex]:
+    """Pre-vectorization reference builder (pure Python row emission).
+
+    Kept verbatim so tests/test_build_cache.py can pin the vectorized
+    assembly bit-for-bit against it and benchmarks/build_bench.py can
+    measure the speedup against the real historical baseline.  Do not
+    optimize this function."""
     assert objective in ("energy", "time")
     F, E, W, T = p.shape_x
     V = p.topo.n_vertices
     D = p.topo.slot_duration
     horizon = T * D
-    kf, ke, kw = _admissible(p)
+    kf, ke, kw = _admissible_loops(p)
     K = len(kf)
     n_inj = F * W
     n_theta = 1 if objective == "time" else 0
@@ -583,9 +992,18 @@ class FlowPath:
 
 
 def _out_edges(p: ScheduleProblem) -> list[list[int]]:
-    out: list[list[int]] = [[] for _ in range(p.topo.n_vertices)]
-    for e in range(p.topo.n_edges):
-        out[int(p.e_src[e])].append(e)
+    """Outgoing-edge adjacency, memoized on the topology object — the
+    decomposition/search helpers run once per flow per solve, and sweeps
+    build hundreds of problems over the same handful of graphs (degraded
+    topologies are fresh objects, so they get fresh caches)."""
+    t = p.topo
+    cached = getattr(t, "_out_edges_cache", None)
+    if cached is not None:
+        return cached
+    out: list[list[int]] = [[] for _ in range(t.n_vertices)]
+    for e in range(t.n_edges):
+        out[int(t.edges[e, 0])].append(e)
+    t._out_edges_cache = out
     return out
 
 
@@ -629,38 +1047,41 @@ def path_decompose(p: ScheduleProblem, idx: RoutingIndex,
     passive = ~(p.is_server | p.is_switch)
     kf, ke, kw = idx.kf, idx.ke, idx.kw
     out_edges = _out_edges(p)
-    k_of = {(int(kf[k]), int(ke[k]), int(kw[k])): k for k in range(len(kf))}
-
-    def _search(src, dst, usable, convert_ok):
-        return _route_search(p, out_edges, src, dst, usable, convert_ok)
-
     convert_ok = ~passive
+    # per-flow triple ranges: kf is sorted by construction (lexicographic
+    # (f, e, w) order), so each flow owns one contiguous slice
+    bounds = np.searchsorted(kf, np.arange(F + 1))
+    # dense per-flow scratch, touched cells reset between flows:
+    # k_map[e, w] = global triple index (-1 = inadmissible for this
+    # flow), g[e, w] = remaining decomposable volume — precomputed index
+    # arrays instead of the historical (f, e, w)-keyed dicts
+    k_map = np.full((E, W), -1, dtype=np.int64)
+    g = np.zeros((E, W))
+
     paths: list[FlowPath] = []
     for f in range(F):
-        ks = np.flatnonzero(kf == f)
-        g: dict[tuple[int, int], float] = {}
-        for k in ks:
-            if vol[k] > 1e-9:
-                g[(int(ke[k]), int(kw[k]))] = float(vol[k])
+        lo, hi = bounds[f], bounds[f + 1]
+        es, ws = ke[lo:hi], kw[lo:hi]
+        k_map[es, ws] = np.arange(lo, hi)
+        vf = vol[lo:hi]
+        g[es, ws] = np.where(vf > 1e-9, vf, 0.0)
         src, dst = int(p.coflow.src[f]), int(p.coflow.dst[f])
         budget = float(p.coflow.size[f])
         n_before = len(paths)
         guard = 4 * E * W + 16
-        while budget > 1e-9 and g and guard > 0:
+        while (budget > 1e-9 and guard > 0
+               and g[es, ws].max(initial=0.0) > 1e-9):
             guard -= 1
-            path = _search(src, dst,
-                           lambda e, w: g.get((e, w), 0.0) > 1e-9,
-                           convert_ok)
+            path = _route_search(p, out_edges, src, dst,
+                                 lambda e, w: g[e, w] > 1e-9, convert_ok)
             if not path:   # no route, or degenerate src == dst (empty trail)
                 break
-            amt = min(budget, min(g[(e, w)] for e, w in path))
-            for e, w in path:
-                g[(e, w)] -= amt
-                if g[(e, w)] <= 1e-9:
-                    del g[(e, w)]
+            pe = np.array([e for e, _ in path], dtype=np.int64)
+            pw = np.array([w for _, w in path], dtype=np.int64)
+            amt = min(budget, float(g[pe, pw].min()))
+            np.subtract.at(g, (pe, pw), amt)
             budget -= amt
-            triples = np.array([k_of[(f, e, w)] for e, w in path], dtype=np.int64)
-            paths.append(FlowPath(f, triples, amt, int(path[0][1])))
+            paths.append(FlowPath(f, k_map[pe, pw], amt, int(pw[0])))
         if len(paths) > n_before and budget > 1e-9:
             # the LP iterate routed less than the demand (loose tolerance
             # or dropped cyclic residue): rescale this flow's paths so the
@@ -674,13 +1095,14 @@ def path_decompose(p: ScheduleProblem, idx: RoutingIndex,
             # no LP volume survived the 1e-9 gate (tiny flows under a loose
             # LP tolerance) — ship the whole demand on any admissible route
             # so temporal_pack never silently drops a flow
-            allowed = {(int(ke[k]), int(kw[k])) for k in ks}
-            path = _search(src, dst, lambda e, w: (e, w) in allowed,
-                           convert_ok)
+            path = _route_search(p, out_edges, src, dst,
+                                 lambda e, w: k_map[e, w] >= 0, convert_ok)
             if path:       # empty trail (src == dst) has no tx wavelength
-                triples = np.array([k_of[(f, e, w)] for e, w in path],
-                                   dtype=np.int64)
-                paths.append(FlowPath(f, triples, budget, int(path[0][1])))
+                pe = np.array([e for e, _ in path], dtype=np.int64)
+                pw = np.array([w for _, w in path], dtype=np.int64)
+                paths.append(FlowPath(f, k_map[pe, pw], budget, int(pw[0])))
+        k_map[es, ws] = -1        # reset scratch for the next flow
+        g[es, ws] = 0.0
     return paths
 
 
@@ -707,13 +1129,23 @@ def temporal_pack(p: ScheduleProblem, idx: RoutingIndex,
     if not paths:
         return np.zeros((F, E, W, T))
     P = len(paths)
-    # path -> triple incidence as flat arrays
+    # path -> triple incidence as flat arrays, with every gather the slot
+    # loop needs (edge, wavelength, endpoints, flow) precomputed once —
+    # the loop body below runs up to 60 capacity-scaling rounds per slot
+    # and must not re-index the triple arrays each time
     pk_path = np.concatenate([np.full(len(pp.triples), i)
                               for i, pp in enumerate(paths)])
     pk_k = np.concatenate([pp.triples for pp in paths])
+    pk_e, pk_w, pk_f = ke[pk_k], kw[pk_k], kf[pk_k]
+    pk_u, pk_v = p.e_src[pk_e], p.e_dst[pk_e]
     p_flow = np.array([pp.flow for pp in paths])
     p_txw = np.array([pp.tx_wavelength for pp in paths])
     p_src = p.coflow.src[p_flow]
+    # ragged per-path views of the same gathers, for the greedy raise
+    p_e = [ke[pp.triples] for pp in paths]
+    p_w = [kw[pp.triples] for pp in paths]
+    p_u = [p.e_src[e_] for e_ in p_e]
+    p_v = [p.e_dst[e_] for e_ in p_e]
 
     # per-flow demand split over its paths, proportional to decomposed volume
     vol_by_flow = np.zeros(F)
@@ -756,23 +1188,23 @@ def temporal_pack(p: ScheduleProblem, idx: RoutingIndex,
         for _ in range(60):
             vk = v[pk_path]                                       # volume per hop
             used_ew = np.zeros((E, W))
-            np.add.at(used_ew, (ke[pk_k], kw[pk_k]), vk)
+            np.add.at(used_ew, (pk_e, pk_w), vk)
             with np.errstate(divide="ignore", invalid="ignore"):
                 over = np.where(used_ew > slot_cap,
                                 slot_cap / np.maximum(used_ew, 1e-30), 1.0)
-            scale_hop = over[ke[pk_k], kw[pk_k]]
+            scale_hop = over[pk_e, pk_w]
             egress = np.zeros(p.topo.n_vertices)
-            np.add.at(egress, p.e_src[ke[pk_k]], vk)
+            np.add.at(egress, pk_u, vk)
             with np.errstate(divide="ignore", invalid="ignore"):
                 over_v = np.where(egress > srv_lim,
                                   srv_lim / np.maximum(egress, 1e-30), 1.0)
-            scale_hop = np.minimum(scale_hop, over_v[p.e_src[ke[pk_k]]])
+            scale_hop = np.minimum(scale_hop, over_v[pk_u])
             ingress = np.zeros(p.topo.n_vertices)
-            np.add.at(ingress, p.e_dst[ke[pk_k]], vk)
+            np.add.at(ingress, pk_v, vk)
             with np.errstate(divide="ignore", invalid="ignore"):
                 over_s = np.where(ingress > sw_lim,
                                   sw_lim / np.maximum(ingress, 1e-30), 1.0)
-            scale_hop = np.minimum(scale_hop, over_s[p.e_dst[ke[pk_k]]])
+            scale_hop = np.minimum(scale_hop, over_s[pk_v])
             pscale = np.ones(P)
             np.minimum.at(pscale, pk_path, scale_hop)
             if (pscale > 1.0 - 1e-9).all():
@@ -783,30 +1215,28 @@ def temporal_pack(p: ScheduleProblem, idx: RoutingIndex,
         # under-served (largest remaining first)
         vk = v[pk_path]
         used_ew = np.zeros((E, W))
-        np.add.at(used_ew, (ke[pk_k], kw[pk_k]), vk)
+        np.add.at(used_ew, (pk_e, pk_w), vk)
         egress = np.zeros(p.topo.n_vertices)
-        np.add.at(egress, p.e_src[ke[pk_k]], vk)
+        np.add.at(egress, pk_u, vk)
         ingress = np.zeros(p.topo.n_vertices)
-        np.add.at(ingress, p.e_dst[ke[pk_k]], vk)
+        np.add.at(ingress, pk_v, vk)
         want = np.where(active, remaining - v, 0.0)
         for pi in np.argsort(-want):
             if want[pi] <= 1e-9:
                 continue
-            ks = paths[pi].triples
             slack = np.min(np.concatenate([
-                slot_cap[ke[ks], kw[ks]] - used_ew[ke[ks], kw[ks]],
-                srv_lim[p.e_src[ke[ks]]] - egress[p.e_src[ke[ks]]],
-                sw_lim[p.e_dst[ke[ks]]] - ingress[p.e_dst[ke[ks]]]]))
+                slot_cap[p_e[pi], p_w[pi]] - used_ew[p_e[pi], p_w[pi]],
+                srv_lim[p_u[pi]] - egress[p_u[pi]],
+                sw_lim[p_v[pi]] - ingress[p_v[pi]]]))
             add = min(float(want[pi]), max(float(slack), 0.0))
             if add <= 1e-9:
                 continue
             v[pi] += add
-            np.add.at(used_ew, (ke[ks], kw[ks]), add)
-            np.add.at(egress, p.e_src[ke[ks]], add)
-            np.add.at(ingress, p.e_dst[ke[ks]], add)
+            np.add.at(used_ew, (p_e[pi], p_w[pi]), add)
+            np.add.at(egress, p_u[pi], add)
+            np.add.at(ingress, p_v[pi], add)
 
-        np.add.at(x, (kf[pk_k], ke[pk_k], kw[pk_k], np.full(len(pk_k), t)),
-                  v[pk_path])
+        np.add.at(x[:, :, :, t], (pk_f, pk_e, pk_w), v[pk_path])
         remaining = np.maximum(remaining - v, 0.0)
     return x
 
@@ -1004,11 +1434,56 @@ def _per_instance_residuals(bs: BlockStackedLP, x: np.ndarray) -> np.ndarray:
     return out
 
 
+def _bucket(x: int, *, minimum: int = 32) -> int:
+    """Round a dimension up to the next shape bucket: the smallest value
+    >= x of the form mant * 2^e with 8 <= mant < 16 (a 4-bit-mantissa
+    grid).  Padding waste stays under ~14% per dimension while the long
+    tail of distinct (n, m_eq, m_ub, nnz) shapes a sweep grid or an
+    arrival trace produces collapses onto a handful of buckets — so the
+    jitted PDHG kernels recompile per bucket, not per exact shape."""
+    if x <= minimum:
+        return minimum
+    e = max(int(x - 1).bit_length() - 4, 0)
+    step = 1 << e
+    return -(-x // step) * step
+
+
+def _pad_for_buckets(g: StructuredLP) -> tuple[StructuredLP,
+                                               tuple[int, int, int]]:
+    """Pad a (stacked) LP to bucketed (n, m_eq, m_ub, nnz).
+
+    Padding is value-neutral, exactly like BatchedLP's: extra COO
+    entries carry val=0 at (row 0, col 0) — adding 0.0 to a scatter sum
+    is an fp identity — padded variables have c=0/xmax=0 (clipped to 0
+    every step), padded equality rows b=0 with no entries, padded
+    inequality rows h=0.  Real inequality rows shift up by the equality
+    padding; returns the padded LP plus the true (n, m_eq, m_ub) for
+    unpadding."""
+    n_t, meq_t = g.n, g.m_eq
+    mub_t, nnz_t = g.m - g.m_eq, len(g.val)
+    n_b, meq_b, mub_b, nnz_b = (_bucket(d)
+                                for d in (n_t, meq_t, mub_t, nnz_t))
+    if (n_b, meq_b, mub_b, nnz_b) == (n_t, meq_t, mub_t, nnz_t):
+        return g, (n_t, meq_t, mub_t)
+    row = np.where(g.row < meq_t, g.row, g.row + (meq_b - meq_t))
+    pad = nnz_b - nnz_t
+    return StructuredLP(
+        c=np.concatenate([g.c, np.zeros(n_b - n_t)]),
+        row=np.concatenate([row, np.zeros(pad, np.int64)]),
+        col=np.concatenate([g.col, np.zeros(pad, np.int64)]),
+        val=np.concatenate([g.val, np.zeros(pad)]),
+        b=np.concatenate([g.b, np.zeros(meq_b - meq_t)]),
+        h=np.concatenate([g.h, np.zeros(mub_b - mub_t)]),
+        xmax=np.concatenate([g.xmax, np.zeros(n_b - n_t)]),
+    ), (n_t, meq_t, mub_t)
+
+
 def solve_lp_batch(lps: list[StructuredLP], iters: int = 4000, *,
                    tol: float | None = None, max_restarts: int = 3,
                    adaptive: bool = True, chunk: int = 500,
                    warm_starts: list[tuple[np.ndarray, np.ndarray]] | None
-                   = None, backend: str = "xla") -> list[PDHGResult]:
+                   = None, backend: str = "xla",
+                   bucket: bool = True) -> list[PDHGResult]:
     """Solve a batch of LPs over the instance axis in one jitted PDHG
     dispatch (block-diagonal stacking; see BlockStackedLP for why this
     beats a literal vmap on CPU).
@@ -1038,7 +1513,16 @@ def solve_lp_batch(lps: list[StructuredLP], iters: int = 4000, *,
     `backend="pallas"` runs every dispatch as fused blocked-ELL Pallas
     bursts (repro.kernels.pdhg_spmv) instead of COO scatters — identical
     escalation/freezing semantics, fp-level trajectory differences only;
-    the default "xla" path is untouched."""
+    the default "xla" path is untouched.
+
+    `bucket=True` (default, xla backend) pads every stacked dispatch's
+    (n, m_eq, m_ub, nnz) — and the instance count — up to shape-bucket
+    boundaries (_bucket: 4-bit-mantissa grid, <~14% padding waste), so
+    grid cells and arrival epochs with nearby shapes reuse one compiled
+    executable instead of recompiling per exact shape.  The padding is
+    value-neutral (see _pad_for_buckets), so results match the
+    unbucketed dispatch to fp reduction order; `bucket=False` restores
+    exact-shape dispatches."""
     _check_backend(backend)
     B = len(lps)
     all_tols = np.array([tol if tol is not None
@@ -1095,25 +1579,56 @@ def solve_lp_batch(lps: list[StructuredLP], iters: int = 4000, *,
                 + [states[i][1][lps[i].m_eq:] for i in sub]))
         if backend == "pallas":
             x, y, used = _run_pallas(g, bs, x0, y0, sub, budget)
+            x_np, y_np = np.asarray(x)[:g.n], np.asarray(y)[:g.m]
         else:
-            args = (jnp.asarray(g.c), jnp.asarray(g.row), jnp.asarray(g.col),
-                    jnp.asarray(g.val), jnp.asarray(g.b), jnp.asarray(g.h),
-                    jnp.asarray(g.xmax))
+            # shape bucketing: pad the stacked dims (and the instance
+            # count) up to bucket boundaries so the jitted kernels are
+            # compiled per bucket, not per exact shape — the padding is
+            # value-neutral (see _pad_for_buckets), so trajectories
+            # match the unbucketed dispatch
+            B_sub = len(sub)
+            gp, (n_t, meq_t, mub_t) = (
+                _pad_for_buckets(g) if bucket
+                else (g, (g.n, g.m_eq, g.m - g.m_eq)))
+            shift = gp.m_eq - meq_t
+            if gp.n != n_t:
+                x0 = jnp.concatenate([x0, jnp.zeros(gp.n - n_t)])
+            if gp.m != g.m:
+                y0 = jnp.concatenate([y0[:meq_t], jnp.zeros(shift),
+                                      y0[meq_t:],
+                                      jnp.zeros(gp.m - g.m - shift)])
+            args = (jnp.asarray(gp.c), jnp.asarray(gp.row),
+                    jnp.asarray(gp.col), jnp.asarray(gp.val),
+                    jnp.asarray(gp.b), jnp.asarray(gp.h),
+                    jnp.asarray(gp.xmax))
             if adaptive:
-                inst_n = np.repeat(np.arange(len(sub)), np.diff(bs.n_off))
-                inst_m = np.concatenate(
-                    [np.repeat(np.arange(len(sub)), np.diff(bs.eq_off)),
-                     np.repeat(np.arange(len(sub)), np.diff(bs.ub_off))])
+                # padded coords go to the dump segment num_b; fake
+                # instances (instance-count bucketing) have no rows and
+                # tol=inf, so they freeze at the first residual check
+                num_b = ((1 << max(B_sub - 1, 0).bit_length()) if bucket
+                         else B_sub)
+                inst_n = np.full(gp.n, num_b, np.int32)
+                inst_n[:n_t] = np.repeat(np.arange(B_sub), np.diff(bs.n_off))
+                inst_m = np.full(gp.m, num_b, np.int32)
+                inst_m[:meq_t] = np.repeat(np.arange(B_sub),
+                                           np.diff(bs.eq_off))
+                inst_m[gp.m_eq:gp.m_eq + mub_t] = np.repeat(
+                    np.arange(B_sub), np.diff(bs.ub_off))
+                tols_sub = np.concatenate(
+                    [all_tols[sub], np.full(num_b - B_sub, np.inf)])
                 x, y, _, used_chunks = _pdhg_run_adaptive(
-                    *args, x0, y0, jnp.asarray(all_tols[sub]),
-                    jnp.asarray(inst_n), jnp.asarray(inst_m), len(sub),
-                    g.m, g.n, g.m_eq, chunk, budget // chunk)
-                used = np.asarray(used_chunks) * chunk
+                    *args, x0, y0, jnp.asarray(tols_sub),
+                    jnp.asarray(inst_n), jnp.asarray(inst_m), num_b,
+                    gp.m, gp.n, gp.m_eq, chunk, budget // chunk)
+                used = np.asarray(used_chunks)[:B_sub] * chunk
             else:
-                x, y, _, _ = _pdhg_resume(*args, x0, y0, g.m, g.n, g.m_eq,
-                                          budget)
-                used = np.full(len(sub), budget)
-        x_np, y_np = np.asarray(x)[:g.n], np.asarray(y)[:g.m]
+                x, y, _, _ = _pdhg_resume(*args, x0, y0, gp.m, gp.n,
+                                          gp.m_eq, budget)
+                used = np.full(B_sub, budget)
+            y_arr = np.asarray(y)
+            x_np = np.asarray(x)[:n_t]
+            y_np = np.concatenate([y_arr[:meq_t],
+                                   y_arr[gp.m_eq:gp.m_eq + mub_t]])
         res = _per_instance_residuals(bs, x_np)
         outs = {}
         for j, i in enumerate(sub):
@@ -1191,8 +1706,8 @@ def solve_lp_batch(lps: list[StructuredLP], iters: int = 4000, *,
 def solve_fast_batch(problems: list[ScheduleProblem],
                      objective: str = "energy", *,
                      iters: int = 4000, tol: float | None = None,
-                     adaptive: bool = True,
-                     backend: str = "xla") -> list[FastPathResult]:
+                     adaptive: bool = True, backend: str = "xla",
+                     bucket: bool = True) -> list[FastPathResult]:
     """Batched fast path over ScheduleProblems sharing one topology.
 
     The routing LPs (which differ per instance through task placement and
@@ -1219,7 +1734,8 @@ def solve_fast_batch(problems: list[ScheduleProblem],
             raise ValueError("solve_fast_batch requires a shared topology "
                              f"structure; got {t0.name} and {t.name}")
     return solve_fast_ensemble(problems, objective, iters=iters, tol=tol,
-                               adaptive=adaptive, chunk=500, backend=backend)
+                               adaptive=adaptive, chunk=500, backend=backend,
+                               bucket=bucket)
 
 
 # ---------------------------------------------------------------------------
@@ -1392,8 +1908,8 @@ def solve_fast_warm(p: ScheduleProblem, objective: str = "energy", *,
                     warm: FastPathResult | None = None,
                     flow_map: np.ndarray | None = None,
                     iters: int = 4000, tol: float | None = None,
-                    chunk: int = 250, backend: str = "xla"
-                    ) -> FastPathResult:
+                    chunk: int = 250, backend: str = "xla",
+                    bucket: bool = True) -> FastPathResult:
     """Single-instance fast path with an optional projected warm start and
     the fused adaptive convergence loop.
 
@@ -1424,7 +1940,8 @@ def solve_fast_warm(p: ScheduleProblem, objective: str = "energy", *,
         except (ValueError, KeyError, IndexError):
             warm_starts = None         # structure changed -> cold start
     res = solve_lp_batch([lp], iters=iters, tol=tol, chunk=chunk,
-                         warm_starts=warm_starts, backend=backend)[0]
+                         warm_starts=warm_starts, backend=backend,
+                         bucket=bucket)[0]
     out = _assemble_fast_result(p, lp, idx, res)
     out.warm_started = warm_starts is not None
     return out
@@ -1435,7 +1952,8 @@ def solve_fast_ensemble(problems: list[ScheduleProblem],
                         warm: list[FastPathResult] | None = None,
                         iters: int = 4000, tol: float | None = None,
                         adaptive: bool = True, chunk: int | None = None,
-                        backend: str = "xla") -> list[FastPathResult]:
+                        backend: str = "xla",
+                        bucket: bool = True) -> list[FastPathResult]:
     """Batched fast path over a (possibly heterogeneous) instance list.
 
     Unlike solve_fast_batch this does not require a shared topology —
@@ -1463,6 +1981,6 @@ def solve_fast_ensemble(problems: list[ScheduleProblem],
         chunk = 250 if warm_starts is not None else 500
     results = solve_lp_batch(lps, iters=iters, tol=tol, adaptive=adaptive,
                              chunk=chunk, warm_starts=warm_starts,
-                             backend=backend)
+                             backend=backend, bucket=bucket)
     return [_assemble_fast_result(p, lp, idx, res)
             for p, (lp, idx), res in zip(problems, built, results)]

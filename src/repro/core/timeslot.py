@@ -17,6 +17,7 @@ path) and any heuristic can be scored identically.
 """
 from __future__ import annotations
 
+import copy
 import dataclasses
 
 import numpy as np
@@ -104,6 +105,30 @@ class ScheduleProblem:
     def slot_cap_gbits(self) -> np.ndarray:
         """(E, W) capacity in Gbits per slot: C_uvw * D (eq. 28)."""
         return self.topo.cap * self.topo.slot_duration
+
+
+_KEEP = object()          # rehorizon sentinel: "leave path_slack alone"
+
+
+def rehorizon(p: ScheduleProblem, n_slots: int, *,
+              path_slack=_KEEP) -> ScheduleProblem:
+    """Copy of `p` with a new horizon, skipping the derived-array rebuild.
+
+    None of __post_init__'s products (edge endpoints, flow_edge_mask,
+    edge_w_ok, device kind/power arrays) depend on n_slots, so when the
+    route-pruning setting is unchanged the copy shares them with `p` —
+    this is what the horizon-doubling retry ladders (sweep/runner.py,
+    core.arrivals) call instead of re-deriving everything per retry.
+    Passing a different `path_slack` (e.g. None to drop pruning) falls
+    back to full construction, since the mask genuinely changes."""
+    if path_slack is not _KEEP and path_slack != p.path_slack:
+        return ScheduleProblem(p.topo, p.coflow, n_slots=n_slots,
+                               rho=p.rho, q_weight=p.q_weight,
+                               release_slot=p.release_slot,
+                               path_slack=path_slack)
+    q = copy.copy(p)          # shallow: derived arrays are shared
+    q.n_slots = n_slots
+    return q
 
 
 @dataclasses.dataclass

@@ -76,9 +76,29 @@ class EllBlocks:
         return float(np.count_nonzero(self.val)) / max(len(self.val), 1)
 
 
-def ell_blocks(row: np.ndarray, col: np.ndarray, val: np.ndarray,
-               n_rows: int, *, bm: int = 8, align: int = 8) -> EllBlocks:
-    """Pack COO entries into blocked-ELL rows keyed by `row`.
+@dataclasses.dataclass(frozen=True)
+class EllPlanSide:
+    """The value-independent half of one blocked-ELL direction: gather
+    indices and storage layout, plus the (order, flat) permutation that
+    scatters COO values into storage slots.  Built once per sparsity
+    pattern; `ell_refill` turns it into an EllBlocks for any coefficient
+    vector in O(nnz) (core.solver caches plans across re-solves so a
+    warm-started epoch never pays the argsort/width scan again)."""
+
+    idx: np.ndarray            # (total,) int32 gather indices, 0 for padding
+    order: np.ndarray          # (nnz,) stable row-sort permutation of COO
+    flat: np.ndarray           # (nnz,) storage slot of each sorted entry
+    size: int                  # total storage slots
+    offsets: tuple[int, ...]
+    widths: tuple[int, ...]
+    bm: int
+    n_rows: int
+    n_rows_pad: int
+
+
+def ell_blocks_plan(row: np.ndarray, col: np.ndarray, n_rows: int, *,
+                    bm: int = 8, align: int = 8) -> EllPlanSide:
+    """Lay out COO entries (keyed by `row`) in blocked-ELL storage.
 
     Entries keep their COO appearance order within each row (stable
     sort), so repeated packs of the same operator are bit-identical.
@@ -106,16 +126,32 @@ def ell_blocks(row: np.ndarray, col: np.ndarray, val: np.ndarray,
     widths_arr = np.asarray(widths, np.int64)
     offsets_arr = np.asarray(offsets, np.int64)
 
-    idx = np.zeros(off, np.int32)
-    vals = np.zeros(off, np.float32)
     r = row[order]
     blk = r // bm
     flat = offsets_arr[blk] + (r - blk * bm) * widths_arr[blk] + pos
+    idx = np.zeros(off, np.int32)
     idx[flat] = np.asarray(col, np.int64)[order].astype(np.int32)
-    vals[flat] = np.asarray(val)[order].astype(np.float32)
-    return EllBlocks(idx=idx, val=vals, offsets=tuple(offsets),
-                     widths=tuple(widths), bm=bm, n_rows=n_rows,
-                     n_rows_pad=n_blocks * bm)
+    return EllPlanSide(idx=idx, order=order, flat=flat, size=off,
+                       offsets=tuple(offsets), widths=tuple(widths),
+                       bm=bm, n_rows=n_rows, n_rows_pad=n_blocks * bm)
+
+
+def ell_refill(plan: EllPlanSide, val: np.ndarray) -> EllBlocks:
+    """Scatter a coefficient vector into a plan's storage layout —
+    the O(nnz) value-refresh half of `ell_blocks`."""
+    vals = np.zeros(plan.size, np.float32)
+    vals[plan.flat] = np.asarray(val)[plan.order].astype(np.float32)
+    return EllBlocks(idx=plan.idx, val=vals, offsets=plan.offsets,
+                     widths=plan.widths, bm=plan.bm, n_rows=plan.n_rows,
+                     n_rows_pad=plan.n_rows_pad)
+
+
+def ell_blocks(row: np.ndarray, col: np.ndarray, val: np.ndarray,
+               n_rows: int, *, bm: int = 8, align: int = 8) -> EllBlocks:
+    """Pack COO entries into blocked-ELL rows keyed by `row` (plan +
+    refill in one step; see ell_blocks_plan for the layout rules)."""
+    return ell_refill(ell_blocks_plan(row, col, n_rows, bm=bm, align=align),
+                      val)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -138,13 +174,36 @@ class EllOperator:
         return self.cols.n_rows_pad
 
 
+@dataclasses.dataclass(frozen=True)
+class EllPlan:
+    """Both directions of an operator's blocked-ELL layout, values
+    excluded — the cacheable product of a COO sparsity pattern."""
+
+    rows: EllPlanSide
+    cols: EllPlanSide
+    m: int
+    n: int
+
+
+def ell_plan(row: np.ndarray, col: np.ndarray, m: int, n: int, *,
+             bm: int = 8, align: int = 8) -> EllPlan:
+    """Lay out a COO pattern in both blocked-ELL directions."""
+    return EllPlan(rows=ell_blocks_plan(row, col, m, bm=bm, align=align),
+                   cols=ell_blocks_plan(col, row, n, bm=bm, align=align),
+                   m=m, n=n)
+
+
+def ell_fill(plan: EllPlan, val: np.ndarray) -> EllOperator:
+    """Refresh both directions of a planned operator with new values."""
+    return EllOperator(rows=ell_refill(plan.rows, val),
+                       cols=ell_refill(plan.cols, val),
+                       m=plan.m, n=plan.n)
+
+
 def ell_pack(row: np.ndarray, col: np.ndarray, val: np.ndarray,
              m: int, n: int, *, bm: int = 8, align: int = 8) -> EllOperator:
     """Pack a COO operator into both blocked-ELL directions."""
-    return EllOperator(
-        rows=ell_blocks(row, col, val, m, bm=bm, align=align),
-        cols=ell_blocks(col, row, val, n, bm=bm, align=align),
-        m=m, n=n)
+    return ell_fill(ell_plan(row, col, m, n, bm=bm, align=align), val)
 
 
 def spmv_blocks(vec, idx, val, *, offsets, widths, bm, n_rows_pad):

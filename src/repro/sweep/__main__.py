@@ -80,9 +80,31 @@ def main(argv=None) -> int:
                     help="instances to spot-check against the exact MILP "
                          "(cheapest first; 0 disables)")
     ap.add_argument("--oracle-time-limit", type=float, default=60.0)
+    ap.add_argument("--profile", action="store_true",
+                    help="print a build/solve/report wall-time split per "
+                         "grid cell (with structure-cache hit/miss "
+                         "deltas from core.solver.build_cache_stats)")
+    ap.add_argument("--jax-cache", default="",
+                    help="opt-in persistent JAX compilation cache "
+                         "directory: compiled PDHG executables survive "
+                         "across sweep processes (pairs with the solver's "
+                         "shape bucketing, which keeps the set of "
+                         "distinct shapes small)")
     ap.add_argument("--out", default="results/sweep",
                     help="output directory for results.csv / results.md")
     args = ap.parse_args(argv)
+
+    if args.jax_cache:
+        import jax
+        try:
+            jax.config.update("jax_compilation_cache_dir", args.jax_cache)
+            jax.config.update("jax_persistent_cache_min_entry_size_bytes",
+                              -1)
+            jax.config.update("jax_persistent_cache_min_compile_time_secs",
+                              0)
+        except AttributeError:        # older jax without the knobs
+            print(f"warning: this jax build does not support the "
+                  f"persistent compilation cache; --jax-cache ignored")
 
     fail_universe = {k: v for k, v in failures.SCENARIOS.items()
                      if k != "none"}
@@ -103,7 +125,8 @@ def main(argv=None) -> int:
         n_reduce=args.n_reduce, n_slots=args.slots or None,
         iters=args.iters, backend=args.backend,
         oracle_check=args.oracle_check,
-        oracle_time_limit=args.oracle_time_limit)
+        oracle_time_limit=args.oracle_time_limit,
+        profile=args.profile)
 
     try:
         spec.validate()
@@ -113,8 +136,12 @@ def main(argv=None) -> int:
     t0 = time.perf_counter()
     records, _ = run_sweep(spec, log=print)
     out = pathlib.Path(args.out)
+    t_report = time.perf_counter()
     csv_path = write_csv(records, out / "results.csv")
     md_path = write_markdown(records, out / "results.md")
+    if args.profile:
+        print(f"    profile report: "
+              f"{(time.perf_counter() - t_report) * 1e3:.1f} ms")
     n_inf = sum(not r.feasible for r in records)
     print(f"\n{len(records)} instances in {time.perf_counter()-t0:.1f} s "
           f"({n_inf} infeasible) -> {csv_path}, {md_path}")

@@ -65,6 +65,10 @@ class SweepSpec:
     path_slack: int | None = 2        # near-shortest route pruning; None = off
     oracle_check: int = 0             # instances to spot-check vs the MILP
     oracle_time_limit: float = 60.0
+    # print a build/solve wall-time split per grid cell (problem + LP
+    # assembly vs PDHG/packing), with structure-cache hit/miss deltas
+    # from core.solver.build_cache_stats()
+    profile: bool = False
 
     def validate(self) -> None:
         for t in self.topos:
@@ -138,6 +142,21 @@ class SweepRecord:
         return self.energy_j if self.objective == "energy" else self.completion_s
 
 
+def _profile_line(say, label: str, snap, wall_s: float) -> None:
+    """One --profile line: LP-assembly vs solve split for a finished cell
+    (`snap` is the build_cache_stats snapshot taken before the cell)."""
+    d = solver.build_cache_stats()
+    build_s = ((d.structure_s + d.fill_s + d.ell_s)
+               - (snap.structure_s + snap.fill_s + snap.ell_s))
+    say(f"    profile {label}: build {build_s * 1e3:7.1f} ms "
+        f"(structure {d.structure_hits - snap.structure_hits} hit"
+        f"/{d.structure_misses - snap.structure_misses} miss, "
+        f"ell {d.ell_hits - snap.ell_hits} hit"
+        f"/{d.ell_misses - snap.ell_misses} miss) | "
+        f"solve {(wall_s - build_s) * 1e3:8.1f} ms | "
+        f"total {wall_s * 1e3:8.1f} ms")
+
+
 def _problems_for(topo, pat: traffic.TrafficPattern, spec: SweepSpec):
     coflows = traffic.generate_batch(topo, pat, spec.seeds)
     probs = []
@@ -151,14 +170,18 @@ def _problems_for(topo, pat: traffic.TrafficPattern, spec: SweepSpec):
 
 def _retry_unfinished(probs, results, internal_obj: str, spec: SweepSpec):
     """Per-instance horizon-doubling retry for any schedule the greedy
-    packer could not finish inside the horizon (in place)."""
+    packer could not finish inside the horizon (in place).  Retried
+    problems come from timeslot.rehorizon, which reuses the original
+    instance's derived arrays (and thereby its cached LP structure)
+    instead of re-deriving them — only the last-resort retry that drops
+    route pruning pays a full rebuild."""
     for i, (p, r) in enumerate(zip(probs, results)):
         tries = 0
         while (r.remaining_gbits > 1e-6 or not r.metrics.feasible) and tries < 2:
             # widen the horizon, and drop route pruning on the last try in
             # case feasibility needs a detour the shortest-path set lacks
-            p = timeslot.ScheduleProblem(
-                p.topo, p.coflow, n_slots=2 * p.n_slots, rho=p.rho,
+            p = timeslot.rehorizon(
+                p, 2 * p.n_slots,
                 path_slack=p.path_slack if tries == 0 else None)
             r = solver.solve_fast(p, internal_obj, iters=spec.iters,
                                   tol=spec.tol, backend=spec.backend)
@@ -271,16 +294,31 @@ def run_sweep(spec: SweepSpec, *, log: Callable[[str], None] | None = None
     problems: list[timeslot.ScheduleProblem] = []
     for topo_name in spec.topos:
         topo = topology.build(topo_name)
+        # one placeholder per topology for arrival rows (keeps records/
+        # problems index-aligned, nothing ever reads it) — hoisted out of
+        # the per-cell loop instead of rebuilding an empty problem per row
+        placeholder = (timeslot.ScheduleProblem(
+            topo, traffic.empty_coflow(topo.n_vertices), n_slots=2,
+            rho=spec.rho) if spec.arrivals else None)
         for pat_name in spec.patterns:
             pat = traffic.pattern(pat_name, n_map=spec.n_map,
                                   n_reduce=spec.n_reduce,
                                   total_gbits=spec.total_gbits)
+            t_gen = time.perf_counter()
             base_probs = _problems_for(topo, pat, spec)
+            t_gen = time.perf_counter() - t_gen
+            if spec.profile:
+                say(f"    profile {topo_name}/{pat_name}: "
+                    f"problem generation {t_gen * 1e3:.1f} ms "
+                    f"({len(base_probs)} instances)")
             for obj in spec.objectives:
                 # shallow copy: problems are objective-independent, but
                 # _solve_group may swap entries during its retry ladder
                 probs = list(base_probs)
+                snap = solver.build_cache_stats().snapshot()
+                t_cell = time.perf_counter()
                 results, per_inst_s = _solve_group(probs, OBJECTIVES[obj], spec)
+                t_cell = time.perf_counter() - t_cell
                 offered = [bp.coflow.total_gbits for bp in probs]
                 for seed, p, r, off in zip(spec.seeds, probs, results,
                                            offered):
@@ -293,9 +331,15 @@ def run_sweep(spec: SweepSpec, *, log: Callable[[str], None] | None = None
                     f"E={np.mean([x.metrics.energy_j for x in results]):9.1f} J  "
                     f"M={np.mean([x.metrics.completion_s for x in results]):6.3f} s  "
                     f"({per_inst_s*1e3:.0f} ms/inst)")
+                if spec.profile:
+                    _profile_line(say, f"{topo_name}/{pat_name}/min-{obj}",
+                                  snap, t_cell)
                 for fail_name in spec.failures:
+                    snap = solver.build_cache_stats().snapshot()
+                    t_cell = time.perf_counter()
                     f_probs, f_results, f_s = _solve_failure_group(
                         probs, results, fail_name, OBJECTIVES[obj], spec)
+                    t_cell = time.perf_counter() - t_cell
                     ratios, survs = [], []
                     for seed, hp, off, fp, fr in zip(
                             spec.seeds, probs, offered, f_probs, f_results):
@@ -313,8 +357,14 @@ def run_sweep(spec: SweepSpec, *, log: Callable[[str], None] | None = None
                         f"cap-{np.mean(ratios):5.1%}  "
                         f"surv={np.mean(survs):6.1%}  "
                         f"({f_s*1e3:.0f} ms/inst warm)")
+                    if spec.profile:
+                        _profile_line(
+                            say, f"{topo_name}/{pat_name}/min-{obj}"
+                                 f"+{fail_name}", snap, t_cell)
                 for fam in spec.arrivals:
                     fam_recs = []
+                    snap = solver.build_cache_stats().snapshot()
+                    t_cell = time.perf_counter()
                     for seed in spec.seeds:
                         trace, res, wall = _solve_arrival_cell(
                             topo, pat, fam, OBJECTIVES[obj], spec, seed)
@@ -323,17 +373,19 @@ def run_sweep(spec: SweepSpec, *, log: Callable[[str], None] | None = None
                                               spec.backend)
                         fam_recs.append(rec)
                         records.append(rec)
-                        # cheap placeholder keeps records/problems index-
-                        # aligned; _spot_check skips arrival rows, so
-                        # nothing ever reads it
-                        problems.append(timeslot.ScheduleProblem(
-                            topo, traffic.empty_coflow(topo.n_vertices),
-                            n_slots=2, rho=spec.rho))
+                        # the hoisted placeholder keeps records/problems
+                        # index-aligned; _spot_check skips arrival rows,
+                        # so nothing ever reads it
+                        problems.append(placeholder)
                     say(f"{topo_name:10s} {pat_name:8s} min-{obj:10s} "
                         f"~{fam:9s} "
                         f"epochs={np.mean([r.epochs for r in fam_recs]):4.1f}  "
                         f"resp={np.mean([r.mean_response_s for r in fam_recs]):6.2f} s  "
                         f"backlog={np.mean([r.backlog_gbits for r in fam_recs]):5.2f} Gbit")
+                    if spec.profile:
+                        _profile_line(
+                            say, f"{topo_name}/{pat_name}/min-{obj}~{fam}",
+                            snap, time.perf_counter() - t_cell)
     if spec.oracle_check:
         _spot_check(records, problems, spec, say)
     return records, problems
