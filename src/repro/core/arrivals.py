@@ -16,7 +16,10 @@ module turns the one-shot optimizer into a simulated online scheduler:
     ``solver.project_warm_start`` (``flow_map`` carries residual flows
     forward under their new indices; topology-shape changes or
     projection failures fall back to a cold solve), on either solver
-    backend.
+    backend;
+  * :func:`interleave_traces` / :func:`merge_traces` merge per-tenant
+    traces into one deterministic global stream — the request feed of
+    the multi-tenant scheduler service (:mod:`repro.service`).
 
 Epoch lifecycle (see docs/ARCHITECTURE.md "The arrivals engine"):
 
@@ -144,6 +147,47 @@ def trace_at_t0(coflows: list[CoflowSet]) -> list[Arrival]:
 
 
 # ---------------------------------------------------------------------------
+# Multi-tenant trace interleaving (the scheduler service, repro.service)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TenantArrival:
+    """One arrival tagged with the tenant (trace index) that owns it."""
+
+    tenant: int
+    arrival: Arrival
+
+
+def interleave_traces(traces: list[list[Arrival]]) -> list[TenantArrival]:
+    """Merge per-tenant arrival traces into one global, deterministic
+    event stream ordered by (t_arrive, tenant index, coflow_id).
+
+    Simultaneous arrivals — common with "burst" families, and guaranteed
+    at t = 0 where every trace places its first co-flow — tie-break on
+    the tenant index and then the per-tenant coflow_id, so the stream
+    order (and everything the service loop derives from it: admission
+    order, shed decisions, event logs) is a pure function of the traces.
+    Per-tenant coflow_ids are preserved; (tenant, coflow_id) is the
+    globally unique request key."""
+    out = [TenantArrival(k, a) for k, tr in enumerate(traces) for a in tr]
+    out.sort(key=lambda ta: (ta.arrival.t_arrive, ta.tenant,
+                             ta.arrival.coflow_id))
+    return out
+
+
+def merge_traces(traces: list[list[Arrival]]) -> list[Arrival]:
+    """Flatten tenant traces into one `run_online`-ready trace.
+
+    The rolling-horizon driver keys its co-flow accounting by coflow_id,
+    so the interleaved stream is renumbered globally (in interleaved
+    order); use this to score a whole multi-tenant workload as a single
+    shared-fabric run_online trace (every tenant's co-flows compete for
+    the same topology)."""
+    return [Arrival(ta.arrival.t_arrive, ta.arrival.coflow, i)
+            for i, ta in enumerate(interleave_traces(traces))]
+
+
+# ---------------------------------------------------------------------------
 # Rolling-horizon driver
 # ---------------------------------------------------------------------------
 
@@ -212,8 +256,8 @@ class OnlineResult:
         return float(np.mean(its)) if its else 0.0
 
 
-def _flow_progress(p: ScheduleProblem, x: np.ndarray, t_end: int
-                   ) -> tuple[np.ndarray, np.ndarray]:
+def flow_progress(p: ScheduleProblem, x: np.ndarray, t_end: int
+                  ) -> tuple[np.ndarray, np.ndarray]:
     """(shipped, finish_s) per flow over the executed prefix.
 
     `shipped[f]` is the net injection at flow f's source in slots
@@ -245,6 +289,10 @@ def _flow_progress(p: ScheduleProblem, x: np.ndarray, t_end: int
             in_slot = float(tx_time[:, :, t][used].max(initial=0.0))
             finish[f] = D * t + in_slot
     return shipped, finish
+
+
+# historical private name (the service loop made the helper public)
+_flow_progress = flow_progress
 
 
 def run_online(topo: Topology, trace: list[Arrival],
@@ -351,7 +399,7 @@ def run_online(topo: Topology, trace: list[Arrival],
 
         last = not pending
         executed = p.n_slots if last else min(p.n_slots, epoch_slots)
-        shipped, finish = _flow_progress(p, r.schedule, executed)
+        shipped, finish = flow_progress(p, r.schedule, executed)
         res_after = np.maximum(size - shipped, 0.0)
         done = res_after <= 1e-9
         for i in np.flatnonzero(done):

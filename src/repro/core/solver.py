@@ -617,6 +617,54 @@ def reset_build_caches() -> None:
         setattr(BUILD_STATS, f.name, f.default)
 
 
+@dataclasses.dataclass
+class DispatchStats:
+    """Counters for stacked PDHG dispatches (solve_lp_batch).
+
+    A dispatch's compiled executable is keyed by its *post-bucketing*
+    static shape (padded n/m_eq/m/nnz, instance count, chunk schedule,
+    backend) — `shape_hits` counts dispatches that landed on a shape
+    this process has dispatched before (the jitted kernel, and with
+    `--jax-cache` the persistent XLA cache, can reuse the compiled
+    executable), `shape_misses` counts first-seen shapes.  The
+    multi-tenant scheduler service reads deltas of these counters to
+    report its bucket-hit ratio; read via `dispatch_stats()`, clear via
+    `reset_dispatch_stats()`."""
+
+    dispatches: int = 0
+    shape_hits: int = 0
+    shape_misses: int = 0
+
+    def snapshot(self) -> "DispatchStats":
+        return dataclasses.replace(self)
+
+
+DISPATCH_STATS = DispatchStats()
+_DISPATCH_SHAPES: set = set()
+
+
+def dispatch_stats() -> DispatchStats:
+    """The live stacked-dispatch shape counters (see DispatchStats)."""
+    return DISPATCH_STATS
+
+
+def reset_dispatch_stats() -> None:
+    """Forget seen dispatch shapes and zero the counters."""
+    _DISPATCH_SHAPES.clear()
+    for f in dataclasses.fields(DispatchStats):
+        setattr(DISPATCH_STATS, f.name, f.default)
+
+
+def _note_dispatch(shape: tuple) -> None:
+    """Record one stacked dispatch's static shape (see DispatchStats)."""
+    DISPATCH_STATS.dispatches += 1
+    if shape in _DISPATCH_SHAPES:
+        DISPATCH_STATS.shape_hits += 1
+    else:
+        DISPATCH_STATS.shape_misses += 1
+        _DISPATCH_SHAPES.add(shape)
+
+
 def _structure_key(p: ScheduleProblem, objective: str) -> tuple:
     """Hashable identity of a routing LP's *structure*.
 
@@ -1539,6 +1587,9 @@ def solve_lp_batch(lps: list[StructuredLP], iters: int = 4000, *,
 
         op, vecs, ell = _pack_pallas(g.c, g.row, g.col, g.val, g.b, g.h,
                                      g.xmax, g.m_eq)
+        # the blocked-ELL packer's padded grid is the compile key here
+        _note_dispatch(("pallas", adaptive, chunk if adaptive else 0,
+                        budget, op.n_pad, op.m_pad, len(sub)))
         x0p = jnp.pad(x0.astype(jnp.float32), (0, op.n_pad - g.n))
         y0p = jnp.pad(y0.astype(jnp.float32), (0, op.m_pad - g.m))
         if adaptive:
@@ -1616,12 +1667,16 @@ def solve_lp_batch(lps: list[StructuredLP], iters: int = 4000, *,
                     np.arange(B_sub), np.diff(bs.ub_off))
                 tols_sub = np.concatenate(
                     [all_tols[sub], np.full(num_b - B_sub, np.inf)])
+                _note_dispatch(("xla", True, chunk, budget, gp.n, gp.m,
+                                gp.m_eq, len(gp.val), num_b))
                 x, y, _, used_chunks = _pdhg_run_adaptive(
                     *args, x0, y0, jnp.asarray(tols_sub),
                     jnp.asarray(inst_n), jnp.asarray(inst_m), num_b,
                     gp.m, gp.n, gp.m_eq, chunk, budget // chunk)
                 used = np.asarray(used_chunks)[:B_sub] * chunk
             else:
+                _note_dispatch(("xla", False, 0, budget, gp.n, gp.m,
+                                gp.m_eq, len(gp.val)))
                 x, y, _, _ = _pdhg_resume(*args, x0, y0, gp.m, gp.n,
                                           gp.m_eq, budget)
                 used = np.full(B_sub, budget)
@@ -1984,3 +2039,76 @@ def solve_fast_ensemble(problems: list[ScheduleProblem],
                              backend=backend, bucket=bucket)
     return [_assemble_fast_result(p, lp, idx, res)
             for p, (lp, idx), res in zip(problems, built, results)]
+
+
+def solve_fast_group(problems: list[ScheduleProblem],
+                     objectives: list[str] | str = "energy", *,
+                     warm: list[FastPathResult | None] | None = None,
+                     flow_maps: list[np.ndarray | None] | None = None,
+                     iters: int = 4000, tol: float | None = None,
+                     adaptive: bool = True, chunk: int = 250,
+                     backend: str = "xla",
+                     bucket: bool = True) -> list[FastPathResult]:
+    """One stacked dispatch over a heterogeneous tenant group.
+
+    The coalescing primitive of the multi-tenant scheduler service
+    (repro.service): like solve_fast_ensemble it block-stacks arbitrary
+    instances into a single fused adaptive PDHG dispatch, but each
+    member carries its *own* objective ("energy" or "time" — tenants
+    choose independently) and its own rolling-horizon warm state.
+
+    `warm[i]` is member i's previous-epoch FastPathResult (or None for
+    a cold member) and `flow_maps[i]` names, per flow of `problems[i]`,
+    the warm instance's flow it continues (-1 = new; see
+    project_warm_start).  Warm projection degrades gracefully per
+    member, exactly like solve_fast_warm: a member whose warm state is
+    missing, shape-incompatible, or whose projection raises starts cold
+    (zero iterates) without disturbing its group-mates; the returned
+    results' `warm_started` flags record what really ran.
+
+    Because stacked PDHG decouples exactly over the blocks, every
+    member's trajectory — and therefore its schedule and metrics —
+    matches its own solve_fast_warm solve with the same `chunk`, up to
+    floating-point reduction order (the service's coalescing-
+    correctness test pins this at 1e-4 relative).  Degenerate members
+    (zero flows) solve in closed form inside solve_lp_batch and never
+    widen the dispatch."""
+    _check_backend(backend)
+    if not problems:
+        return []
+    B = len(problems)
+    if isinstance(objectives, str):
+        objectives = [objectives] * B
+    if len(objectives) != B:
+        raise ValueError(f"{len(objectives)} objectives for {B} problems")
+    warm_list = warm if warm is not None else [None] * B
+    maps = flow_maps if flow_maps is not None else [None] * B
+    if len(warm_list) != B or len(maps) != B:
+        raise ValueError("warm/flow_maps length must match problems")
+    built = [build_routing_lp(p, o) for p, o in zip(problems, objectives)]
+    starts: list[tuple[np.ndarray, np.ndarray]] = []
+    flags: list[bool] = []
+    for p, (lp, idx), w, fm in zip(problems, built, warm_list, maps):
+        x0y0 = None
+        if (w is not None and w.index is not None and w.lp_x is not None
+                and w.schedule is not None
+                and w.schedule.shape[1:3] == (p.topo.n_edges,
+                                              p.topo.n_wavelengths)):
+            try:
+                x0y0 = project_warm_start(w, p, lp, idx, flow_map=fm)
+            except (ValueError, KeyError, IndexError):
+                x0y0 = None            # structure changed -> cold member
+        starts.append(x0y0 if x0y0 is not None
+                      else (np.zeros(lp.n), np.zeros(lp.m)))
+        flags.append(x0y0 is not None)
+    lps = [lp for lp, _ in built]
+    results = solve_lp_batch(lps, iters=iters, tol=tol, adaptive=adaptive,
+                             chunk=chunk,
+                             warm_starts=starts if any(flags) else None,
+                             backend=backend, bucket=bucket)
+    out = []
+    for (p, (lp, idx), res, f) in zip(problems, built, results, flags):
+        r = _assemble_fast_result(p, lp, idx, res)
+        r.warm_started = f
+        out.append(r)
+    return out

@@ -1,0 +1,92 @@
+"""Service observability: latency histograms and counters.
+
+Percentiles use the nearest-rank definition (the smallest recorded
+value with at least p% of samples at or below it) rather than an
+interpolating estimator: every reported quantile is then an actual
+recorded latency, and — crucially for the deterministic replay tests —
+formatting a percentile never depends on floating-point interpolation
+details, so event logs stay byte-stable across runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+
+def nearest_rank(values: np.ndarray | list[float], p: float) -> float:
+    """Nearest-rank percentile: the ceil(p/100 * n)-th smallest value.
+
+    `p` in (0, 100]; returns nan on an empty sample."""
+    v = np.sort(np.asarray(values, dtype=np.float64))
+    if v.size == 0:
+        return float("nan")
+    if not 0.0 < p <= 100.0:
+        raise ValueError(f"p={p} not in (0, 100]")
+    idx = max(int(math.ceil(p / 100.0 * v.size)) - 1, 0)
+    return float(v[idx])
+
+
+@dataclasses.dataclass
+class LatencyStats:
+    """Streaming collection of per-request decision latencies (seconds).
+
+    `add` records one request's latency; the percentile properties
+    (nearest-rank, see module docstring) answer the service's SLO
+    questions: p50 the typical request, p99 the contractual tail,
+    p999 the storm tail."""
+
+    samples: list[float] = dataclasses.field(default_factory=list)
+
+    def add(self, latency_s: float) -> None:
+        if latency_s < 0.0 or not np.isfinite(latency_s):
+            raise ValueError(f"bad latency {latency_s}")
+        self.samples.append(float(latency_s))
+
+    @property
+    def count(self) -> int:
+        return len(self.samples)
+
+    @property
+    def mean(self) -> float:
+        return float(np.mean(self.samples)) if self.samples else float("nan")
+
+    @property
+    def max(self) -> float:
+        return max(self.samples) if self.samples else float("nan")
+
+    def percentile(self, p: float) -> float:
+        return nearest_rank(self.samples, p)
+
+    @property
+    def p50(self) -> float:
+        return self.percentile(50.0)
+
+    @property
+    def p99(self) -> float:
+        return self.percentile(99.0)
+
+    @property
+    def p999(self) -> float:
+        return self.percentile(99.9)
+
+
+@dataclasses.dataclass
+class ServiceCounters:
+    """Whole-run counters (all monotone; see docs/SERVICE.md)."""
+
+    arrived: int = 0           # requests read off the interleaved stream
+    admitted: int = 0          # requests scheduled into some window
+    shed: int = 0              # rejected at arrival (waiting queue full)
+    deferred: int = 0          # boundary defer decisions (tenant backlog
+                               # cap; one request may defer many times)
+    dispatches: int = 0        # coalesced solve dispatches issued
+    solver_dispatches: int = 0 # stacked kernel dispatches underneath
+                               # (escalation-ladder levels included)
+    bucket_hits: int = 0       # solver dispatches landing on an already-
+                               # compiled stacked shape (DispatchStats
+                               # delta; hit ratio = hits/solver_dispatches)
+    retries: int = 0           # per-member rehorizon retry solves
+    slo_breaches: int = 0      # requests whose decision latency > slo
+    windows: int = 0           # coalescing windows executed

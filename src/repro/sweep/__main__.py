@@ -34,6 +34,56 @@ def _csv_list(value: str, universe, what: str) -> tuple[str, ...]:
     return items
 
 
+def _run_service_smoke(args) -> int:
+    """The --service mode: one deterministic virtual-clock service run.
+
+    Builds N tenants cycling through the requested topologies and
+    patterns (seeded 0..N-1, poisson arrivals of --arrival-coflows
+    co-flows at --arrival-mean-s), runs repro.service.run_service under
+    the deterministic "iterations" cost model, prints the latency/SLO/
+    admission summary, and writes the canonical event log.  Exit code 1
+    if any demand leaked (nonzero backlog with an un-truncated run)."""
+    from repro import service
+
+    topos = _csv_list(args.topos, topology.BUILDERS, "topology")
+    pats = _csv_list(args.patterns, traffic.PATTERNS, "pattern")
+    spec = arrivals.ArrivalSpec(n_coflows=args.arrival_coflows,
+                                mean_interarrival_s=args.arrival_mean_s)
+    tenants = [
+        service.TenantSpec(
+            name=f"tenant{k}", topo=topology.build(topos[k % len(topos)]),
+            pattern=traffic.pattern(pats[k % len(pats)],
+                                    total_gbits=args.total_gbits,
+                                    n_map=args.n_map,
+                                    n_reduce=args.n_reduce),
+            arrivals=spec, seed=k)
+        for k in range(args.service)]
+    cfg = service.ServiceConfig(window_s=args.epoch_s or None,
+                                iters=args.iters, backend=args.backend,
+                                slo_p99_s=args.slo_s)
+    t0 = time.perf_counter()
+    res = service.run_service(tenants, cfg)
+    wall = time.perf_counter() - t0
+    c, lat = res.counters, res.latency
+    print(f"service: {args.service} tenants, {c.arrived} arrivals, "
+          f"{c.windows} windows in {wall:.1f} s wall")
+    print(f"  latency p50={lat.p50:.6f} p99={lat.p99:.6f} "
+          f"p999={lat.p999:.6f} s (SLO {args.slo_s:g} s, "
+          f"{c.slo_breaches} breaches)")
+    print(f"  admitted={c.admitted} shed={c.shed} deferred={c.deferred}")
+    print(f"  dispatches={c.dispatches} (solver {c.solver_dispatches}, "
+          f"bucket hits {c.bucket_hits}) retries={c.retries}")
+    print(f"  makespan={res.makespan_s:.3f} s "
+          f"energy={res.total_energy_j:.1f} J "
+          f"backlog={res.backlog_gbits:.6f} Gbits")
+    out = pathlib.Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+    log_path = out / "service_events.log"
+    log_path.write_text(res.event_log() + "\n")
+    print(f"  event log -> {log_path} ({len(res.events)} events)")
+    return 1 if res.backlog_gbits > 1e-6 else 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.sweep",
@@ -90,6 +140,16 @@ def main(argv=None) -> int:
                          "across sweep processes (pairs with the solver's "
                          "shape bucketing, which keeps the set of "
                          "distinct shapes small)")
+    ap.add_argument("--service", type=int, default=0, metavar="N",
+                    help="smoke-run the multi-tenant scheduler service "
+                         "(repro.service) with N tenants cycling through "
+                         "--topos/--patterns instead of sweeping; prints "
+                         "decision-latency p50/p99/p999, shed/defer/"
+                         "bucket-hit counters, and writes the canonical "
+                         "event log to <out>/service_events.log")
+    ap.add_argument("--slo-s", type=float, default=0.25,
+                    help="decision-latency SLO for --service breach "
+                         "accounting (seconds)")
     ap.add_argument("--out", default="results/sweep",
                     help="output directory for results.csv / results.md")
     args = ap.parse_args(argv)
@@ -105,6 +165,9 @@ def main(argv=None) -> int:
         except AttributeError:        # older jax without the knobs
             print(f"warning: this jax build does not support the "
                   f"persistent compilation cache; --jax-cache ignored")
+
+    if args.service:
+        return _run_service_smoke(args)
 
     fail_universe = {k: v for k, v in failures.SCENARIOS.items()
                      if k != "none"}

@@ -251,3 +251,93 @@ def test_arrival_record_fields_roundtrip():
     assert {f.name for f in dataclasses.fields(rec)} >= {
         "arrivals", "epochs", "mean_response_s", "backlog_gbits",
         "warm_iterations"}
+
+
+# ---------------------------------------------------------------------------
+# multi-tenant trace interleaving (the scheduler service's request feed)
+# ---------------------------------------------------------------------------
+
+def test_interleave_simultaneous_arrivals_deterministic_order():
+    # every trace's first co-flow lands at t = 0, so the merged stream
+    # always starts with a simultaneous multi-tenant burst; ties break
+    # (tenant, coflow_id), never input-list order games
+    traces = [arrivals.generate_trace(TOPO, LIGHT,
+                                      arrivals.ArrivalSpec(n_coflows=3),
+                                      seed=s)
+              for s in (5, 6, 7)]
+    stream = arrivals.interleave_traces(traces)
+    assert len(stream) == 9
+    keys = [(ta.arrival.t_arrive, ta.tenant, ta.arrival.coflow_id)
+            for ta in stream]
+    assert keys == sorted(keys)
+    head = [(ta.tenant, ta.arrival.coflow_id) for ta in stream[:3]]
+    assert head == [(0, 0), (1, 0), (2, 0)]
+    # per-tenant coflow_ids survive interleaving untouched
+    for k, tr in enumerate(traces):
+        got = [ta.arrival.coflow_id for ta in stream if ta.tenant == k]
+        assert got == [a.coflow_id for a in tr]
+
+
+def test_merge_traces_renumbers_and_run_online_accepts():
+    # a burst trace whose last co-flows land mid-epoch (not on the
+    # epoch grid) plus a t=0 trace: the merged stream must renumber
+    # coflow_ids globally and run through the rolling horizon cleanly
+    burst = arrivals.generate_trace(
+        TOPO, LIGHT, arrivals.ArrivalSpec(family="burst", n_coflows=4,
+                                          burst_size=2,
+                                          mean_interarrival_s=1.3),
+        seed=1)
+    t0 = arrivals.trace_at_t0([traffic.generate(TOPO, LIGHT, 9)])
+    merged = arrivals.merge_traces([burst, t0])
+    assert [a.coflow_id for a in merged] == list(range(5))
+    times = [a.t_arrive for a in merged]
+    assert times == sorted(times)
+    res = arrivals.run_online(TOPO, merged, "energy", iters=1500, tol=2e-3)
+    assert res.backlog_gbits == 0.0
+    assert all(np.isfinite(c.t_done) for c in res.coflows)
+    assert {c.coflow_id for c in res.coflows} == set(range(5))
+
+
+def test_trace_ending_mid_epoch_runs_to_completion():
+    # the final arrival lands inside an epoch (off the boundary grid);
+    # the last epoch must still run its schedule to completion and
+    # charge the co-flow a response time from its true arrival
+    cf0 = traffic.generate(TOPO, HEAVY, 0)
+    cf1 = traffic.generate(TOPO, LIGHT, 1)
+    D = TOPO.slot_duration
+    trace = [arrivals.Arrival(0.0, cf0, 0),
+             arrivals.Arrival(2.5 * D, cf1, 1)]   # mid-epoch (epoch = 4D)
+    res = arrivals.run_online(TOPO, trace, "energy", iters=1500, tol=2e-3)
+    assert res.backlog_gbits == 0.0
+    done = {c.coflow_id: c for c in res.coflows}
+    assert np.isfinite(done[1].t_done)
+    # admitted at the 4D boundary at the earliest, never before arrival
+    assert done[1].t_done > done[1].t_arrive
+    assert done[1].response_s >= 0.0
+    assert sum(e.n_admitted for e in res.epochs) == 2
+
+
+def test_flow_map_projection_across_interleaved_resolves():
+    # two tenants' heavy traces interleaved into one shared-fabric run:
+    # carried residuals from BOTH tenants cross every epoch boundary,
+    # so the flow_map projection has to track tenant-interleaved
+    # indices; warm epochs must actually engage and conserve demand
+    traces = [arrivals.generate_trace(
+        TOPO, HEAVY, arrivals.ArrivalSpec(n_coflows=2,
+                                          mean_interarrival_s=2.0),
+        seed=s) for s in (0, 1)]
+    merged = arrivals.merge_traces(traces)
+    # epoch_s=1.0 makes per-mapper volume span several epochs (as in
+    # benchmarks/arrival_bench.py), so residuals really carry forward
+    warm = arrivals.run_online(TOPO, merged, "energy", iters=3000,
+                               tol=2e-3, epoch_s=1.0, warm=True)
+    cold = arrivals.run_online(TOPO, merged, "energy", iters=3000,
+                               tol=2e-3, epoch_s=1.0, warm=False)
+    assert warm.backlog_gbits == 0.0 and cold.backlog_gbits == 0.0
+    assert any(e.warm for e in warm.epochs[1:])
+    assert not any(e.warm for e in cold.epochs)
+    # both serve every co-flow of both tenants, and the projected
+    # tenant-interleaved warm starts save PDHG work overall
+    assert all(np.isfinite(c.t_done) for c in warm.coflows)
+    assert all(np.isfinite(c.t_done) for c in cold.coflows)
+    assert warm.total_iterations < cold.total_iterations

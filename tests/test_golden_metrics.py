@@ -22,7 +22,8 @@ import pathlib
 import numpy as np
 import pytest
 
-from repro.core import solver, timeslot, topology, traffic
+from repro import service
+from repro.core import arrivals, solver, timeslot, topology, traffic
 
 GOLDEN_PATH = pathlib.Path(__file__).parent / "golden" / "metrics.json"
 RTOL = 1e-4
@@ -34,6 +35,11 @@ GRID = [(topo, obj)
         for obj in ("energy", "time")]
 SEED = 0
 PATTERN = dict(n_map=4, n_reduce=3, total_gbits=8.0)
+
+# the pinned two-tenant service run: an electronic-DCN tenant and a PON
+# tenant sharing one scheduler (repro.service), seed 0 — service-loop
+# refactors cannot silently shift the schedules it emits
+SERVICE_KEY = "service/spine-leaf+pon3/seed0"
 
 
 def _problem(topo_name: str) -> timeslot.ScheduleProblem:
@@ -51,6 +57,31 @@ def _solve(topo_name: str, objective: str, backend: str) -> dict:
             "fairness_term": float(m.fairness_term),
             "served_gbits": float(m.served.sum()),
             "feasible": bool(m.feasible)}
+
+
+def _service_run(backend: str) -> dict:
+    spec = arrivals.ArrivalSpec(n_coflows=2, mean_interarrival_s=2.0)
+    pat = traffic.pattern("uniform", **PATTERN)
+    tenants = [
+        service.TenantSpec("dcn", topology.build("spine-leaf"), pat,
+                           spec, seed=SEED, objective="energy"),
+        service.TenantSpec("pon", topology.build("pon3"), pat,
+                           spec, seed=SEED, objective="time"),
+    ]
+    res = service.run_service(
+        tenants, service.ServiceConfig(iters=3000, tol=2e-3,
+                                       backend=backend))
+    assert res.backlog_gbits == 0.0
+    return {"total_energy_j": float(res.total_energy_j),
+            "makespan_s": float(res.makespan_s),
+            "tenant_energy_j": [float(t.energy_j) for t in res.tenants],
+            "tenant_shipped_gbits": [float(t.shipped_gbits)
+                                     for t in res.tenants],
+            "tenant_makespan_s": [float(t.makespan_s)
+                                  for t in res.tenants],
+            "n_done": sum(r.status == "done" for r in res.requests),
+            "arrived": res.counters.arrived,
+            "admitted": res.counters.admitted}
 
 
 def _golden() -> dict:
@@ -73,13 +104,38 @@ def test_golden_metrics(topo_name, objective, backend):
                     f"change is intentional)")
 
 
+@pytest.mark.parametrize("backend", solver.BACKENDS)
+def test_golden_service_metrics(backend):
+    """The two-tenant service pin: schedule quality of the coalescing
+    loop (per-tenant energies, shipped volumes, completion times) must
+    match the committed numbers on both backends."""
+    want = _golden()[SERVICE_KEY]
+    got = _service_run(backend)
+    # admission accounting is solver-independent: exact equality
+    for key in ("n_done", "arrived", "admitted"):
+        assert got[key] == want[key], key
+    for key in ("total_energy_j", "makespan_s", "tenant_energy_j",
+                "tenant_shipped_gbits", "tenant_makespan_s"):
+        np.testing.assert_allclose(
+            got[key], want[key], rtol=RTOL, atol=1e-9,
+            err_msg=f"{SERVICE_KEY}[{backend}] {key} drifted from "
+                    f"tests/golden/metrics.json (regen only if the "
+                    f"change is intentional)")
+
+
 def _regen() -> None:
     doc = {f"{t}/min-{o}/seed{SEED}": _solve(t, o, "xla") for t, o in GRID}
+    doc[SERVICE_KEY] = _service_run("xla")
     GOLDEN_PATH.parent.mkdir(parents=True, exist_ok=True)
     GOLDEN_PATH.write_text(json.dumps(doc, indent=1, sort_keys=True) + "\n")
     print(f"wrote {GOLDEN_PATH}")
     for k, v in doc.items():
-        print(f"  {k}: E={v['energy_j']:.4f} J  M={v['completion_s']:.6f} s")
+        if k == SERVICE_KEY:
+            print(f"  {k}: E={v['total_energy_j']:.4f} J "
+                  f"M={v['makespan_s']:.6f} s done={v['n_done']}")
+        else:
+            print(f"  {k}: E={v['energy_j']:.4f} J  "
+                  f"M={v['completion_s']:.6f} s")
 
 
 if __name__ == "__main__":
