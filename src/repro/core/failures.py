@@ -245,4 +245,5 @@ def degrade_problem(p: ScheduleProblem, scen: FailureScenario, *,
     return ScheduleProblem(dtopo, cf, n_slots=T, rho=p.rho,
                            q_weight=p.q_weight,
                            release_slot=p.release_slot,
-                           path_slack=p.path_slack)
+                           path_slack=p.path_slack,
+                           flow_weight=p.flow_weight)

@@ -576,6 +576,7 @@ class ProblemStructure:
     ew_w: np.ndarray          # ... and wavelength
     n_srv: int                # server-egress rows
     sw_verts: np.ndarray      # per switch-ingress row: vertex
+    objective: str = "energy"  # which c-vector _fill_lp refreshes
 
 
 @dataclasses.dataclass
@@ -790,7 +791,8 @@ def _build_structure(p: ScheduleProblem, objective: str) -> ProblemStructure:
         idx=idx, n=n, K=K, n_cons=n_cons, m_eq=m_eq,
         m=m_eq + n_ew + n_srv + len(sw_uniq), n_theta=n_theta,
         row=row, col=col, val_base=val_base, theta_pos=theta_pos,
-        ew_e=ew_e, ew_w=ew_w, n_srv=n_srv, sw_verts=sw_uniq)
+        ew_e=ew_e, ew_w=ew_w, n_srv=n_srv, sw_verts=sw_uniq,
+        objective=objective)
 
 
 def _fill_lp(st: ProblemStructure, p: ScheduleProblem) -> StructuredLP:
@@ -830,6 +832,13 @@ def _fill_lp(st: ProblemStructure, p: ScheduleProblem) -> StructuredLP:
         eps_u = np.where(p.is_server[u], p.eps[u], 0.0)
         eps_v = np.where(p.is_server[v], p.eps[v], 0.0)
         c[:K] = (eps_u + eps_v) + (contrib[u] + contrib[v]) + 1e-6
+        if st.objective == "fair" and p.flow_weight is not None:
+            # weighted max-min fairness surrogate: a flow's transport is
+            # priced inversely to its weight, so higher-weight tenants
+            # are served preferentially under contention.  Uniform
+            # weights rescale c by a constant, and solve_lp normalizes
+            # by max|c| — so "fair" then coincides with "energy".
+            c[:K] /= p.flow_weight[kf]
 
     xmax = np.full(st.n, np.inf)
     xmax[:K] = np.minimum(cap[ke, kw] * horizon, total)
@@ -853,7 +862,9 @@ def build_routing_lp(p: ScheduleProblem, objective: str, *,
     tests; the arrays produced are identical either way).  The returned
     row/col/kf/ke/kw arrays are shared with the cache — treat them as
     read-only."""
-    assert objective in ("energy", "time")
+    # "fair" shares the energy structure (n_theta = 0) with a per-flow
+    # reweighted c vector; see _fill_lp and docs/POLICIES.md
+    assert objective in ("energy", "time", "fair")
     key = _structure_key(p, objective) if cache else None
     st = _STRUCTURE_CACHE.get(key) if cache else None
     if st is None:
@@ -1309,6 +1320,10 @@ class FastPathResult:
     # False when solve_fast_warm's projection fell back to a cold start,
     # so callers' warm-vs-cold accounting reflects what really ran
     warm_started: bool = False
+    # core.verify.Certificate when the producer attached one (the policy
+    # zoo always does); the LP fast path leaves it None and callers
+    # certify on demand via core.verify.check_schedule
+    certificate: object | None = None
 
 
 def _assemble_fast_result(p: ScheduleProblem, lp: StructuredLP,
@@ -1340,8 +1355,10 @@ def solve_fast(p: ScheduleProblem, objective: str = "energy", *,
 
     Args:
       p: the problem; flow sizes in Gbits, capacities/rates in Gbps.
-      objective: "energy" (minimize Joules, eq. 22 surrogate) or "time"
-        (minimize the continuous completion-time bound theta).
+      objective: "energy" (minimize Joules, eq. 22 surrogate), "time"
+        (minimize the continuous completion-time bound theta), or "fair"
+        (energy re-priced by 1/flow_weight — weighted max-min fairness
+        surrogate; equals "energy" when weights are uniform).
       iters: PDHG iterations per restart rung (doubled on each restart,
         up to solve_lp's max_restarts).
       tol: primal-residual target in Gbits; default 1e-4 * max demand.

@@ -56,6 +56,12 @@ class ScheduleProblem:
     # `path_slack` hops longer than each flow's shortest route.  None keeps
     # the paper's full route space (any edge not touching src/dst wrongly).
     path_slack: int | None = None
+    # weighted max-min fairness extension (arXiv 1904.03298 lineage): per-flow
+    # positive weights for the "fair" LP objective — a flow's transport is
+    # priced inversely to its weight, so heavier tenants get cheaper (hence
+    # more) service.  None = uniform, which makes "fair" coincide with the
+    # plain energy objective (pinned by tests/test_properties.py).
+    flow_weight: np.ndarray | None = None
 
     def __post_init__(self):
         t = self.topo
@@ -94,6 +100,12 @@ class ScheduleProblem:
         self.flow_edge_mask = mask
         # wavelength availability per edge
         self.edge_w_ok = t.cap > 0.0            # (E, W)
+        if self.flow_weight is not None:
+            w = np.asarray(self.flow_weight, dtype=np.float64)
+            assert w.shape == (F,), (w.shape, F)
+            assert np.isfinite(w).all() and (w > 0).all(), \
+                "flow_weight entries must be positive and finite"
+            self.flow_weight = w
 
     # -- convenience sizes --------------------------------------------------
     @property
@@ -125,7 +137,8 @@ def rehorizon(p: ScheduleProblem, n_slots: int, *,
         return ScheduleProblem(p.topo, p.coflow, n_slots=n_slots,
                                rho=p.rho, q_weight=p.q_weight,
                                release_slot=p.release_slot,
-                               path_slack=path_slack)
+                               path_slack=path_slack,
+                               flow_weight=p.flow_weight)
     q = copy.copy(p)          # shallow: derived arrays are shared
     q.n_slots = n_slots
     return q
@@ -143,7 +156,9 @@ class Metrics:
     served: np.ndarray            # (F,) Gbits delivered
 
     def objective(self, kind: str) -> float:
-        base = self.energy_j if kind == "energy" else self.completion_s
+        # "fair" is a weighted re-pricing of the energy LP (core.solver),
+        # so its exact-accounting base is energy too
+        base = (self.completion_s if kind == "time" else self.energy_j)
         return base + self.fairness_term
 
 

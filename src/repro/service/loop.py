@@ -29,7 +29,12 @@ arrival stream and objective — over shared solver infrastructure:
     time of the window that first scheduled it minus its arrival time
     — queueing delay from deferrals included.  p50/p99/p999 come from
     nearest-rank histograms (repro.service.metrics); breaches of
-    `slo_p99_s` are counted per request.
+    `slo_p99_s` are counted per request;
+  * a tenant whose per-window rehorizon retry ladder still leaves
+    residual demand (or an infeasible schedule) falls back to a cheap
+    baseline policy (`ServiceConfig.fallback_policy`, core.policies)
+    on a stretched horizon — accepted only when the policy schedule
+    certifies feasible and drains the demand (`counters.fallbacks`).
 
 Every timestamp flows through the injectable VirtualClock and (in the
 default "iterations" cost mode) every control-plane cost is a
@@ -47,7 +52,8 @@ from concurrent.futures import ThreadPoolExecutor
 
 import numpy as np
 
-from ..core import solver
+from ..core import solver, verify
+from ..core import policies as policy_zoo
 from ..core.arrivals import (Arrival, ArrivalSpec, TenantArrival,
                              flow_progress, generate_trace,
                              interleave_traces)
@@ -77,7 +83,7 @@ class TenantSpec:
     trace: list[Arrival] | None = None
 
     def __post_init__(self):
-        if self.objective not in ("energy", "time"):
+        if self.objective not in ("energy", "time", "fair"):
             raise ValueError(f"objective {self.objective!r}")
         if self.arrivals is None and self.trace is None:
             raise ValueError(f"tenant {self.name}: needs arrivals or trace")
@@ -112,6 +118,12 @@ class ServiceConfig:
     rho: float = 8.0
     q_weight: float = 100.0
     path_slack: int | None = 2
+    fallback_policy: str | None = "scf"  # baseline policy (core.policies)
+                                    # handed a window when a tenant's
+                                    # rehorizon retry ladder exhausts;
+                                    # None disables the tier
+    verify_schedules: bool = False  # assert a core.verify feasibility
+                                    # certificate on every member result
 
 
 @dataclasses.dataclass
@@ -265,6 +277,8 @@ def run_service(tenants: list[TenantSpec],
     if not tenants:
         raise ValueError("need at least one tenant")
     solver._check_backend(config.backend)
+    fallback = (policy_zoo.get(config.fallback_policy)
+                if config.fallback_policy else None)
     clock = clock or VirtualClock()
     window_s = config.window_s
     if window_s is None:
@@ -435,6 +449,32 @@ def run_service(tenants: list[TenantSpec],
                     if tries:
                         emit("retry", f"tenant={k} window={window} "
                                       f"tries={tries}")
+                    if (fallback is not None
+                            and (r.remaining_gbits > 1e-6
+                                 or not r.metrics.feasible)
+                            and m["p"].coflow.n_flows > 0):
+                        # cheap-fallback tier: the retry ladder is
+                        # exhausted, so hand the window to a baseline
+                        # policy on a stretched horizon — milliseconds
+                        # of greedy packing instead of another PDHG
+                        # rung; accepted only if it certifies feasible
+                        # and drains the demand
+                        p_fb = rehorizon(m["p"], 2 * m["p"].n_slots)
+                        t1 = time.perf_counter()
+                        fb = fallback.solve(p_fb, st.spec.objective,
+                                            backend=config.backend)
+                        wall += time.perf_counter() - t1
+                        if (fb.metrics.feasible
+                                and fb.remaining_gbits <= 1e-6):
+                            m["p"], r = p_fb, fb
+                            counters.fallbacks += 1
+                            emit("fallback",
+                                 f"tenant={k} window={window} "
+                                 f"policy={config.fallback_policy}")
+                    if config.verify_schedules:
+                        cert = r.certificate or verify.check_schedule(
+                            m["p"], r.schedule)
+                        cert.assert_ok(f"tenant {k} window {window}")
                     m["result"] = r
 
                 cost = config.cost.cost_s(iterations=spent,

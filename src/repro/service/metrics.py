@@ -88,5 +88,8 @@ class ServiceCounters:
                                # compiled stacked shape (DispatchStats
                                # delta; hit ratio = hits/solver_dispatches)
     retries: int = 0           # per-member rehorizon retry solves
+    fallbacks: int = 0         # windows handed to the cheap baseline-
+                               # policy tier (core.policies) after the
+                               # retry ladder exhausted
     slo_breaches: int = 0      # requests whose decision latency > slo
     windows: int = 0           # coalescing windows executed

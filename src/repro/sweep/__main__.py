@@ -18,6 +18,7 @@ import pathlib
 import time
 
 from repro.core import arrivals, failures, solver, topology, traffic
+from repro.core import policies as policy_zoo
 
 from .report import write_csv, write_markdown
 from .runner import ALL_TOPOS, OBJECTIVES, SweepSpec, run_sweep
@@ -103,6 +104,11 @@ def main(argv=None) -> int:
                          f"comma list or 'all' "
                          f"({', '.join(k for k in failures.SCENARIOS if k != 'none')}); "
                          "bare --failures means 'all'")
+    ap.add_argument("--policy", nargs="?", const="all", default="",
+                    help="baseline-policy axis (core.policies): run each "
+                         "named policy on every LP instance and record "
+                         "the optimal-vs-practical gap; comma list or "
+                         "'all'; bare --policy means 'all'")
     ap.add_argument("--arrivals", nargs="?", const="all", default="",
                     help="online-arrival families for rolling-horizon "
                          "re-solves (core.arrivals): comma list or 'all' "
@@ -181,6 +187,8 @@ def main(argv=None) -> int:
         arrivals=(_csv_list(args.arrivals, arrivals.FAMILIES,
                             "arrival family")
                   if args.arrivals else ()),
+        policies=(_csv_list(args.policy, policy_zoo.POLICIES, "policy")
+                  if args.policy else ()),
         arrival_coflows=args.arrival_coflows,
         arrival_mean_s=args.arrival_mean_s,
         epoch_s=args.epoch_s or None,

@@ -16,6 +16,7 @@ Regenerate after an *intentional* numbers change:
 and include the diff of tests/golden/metrics.json in the PR so the
 drift is reviewable.
 """
+import functools
 import json
 import pathlib
 
@@ -23,16 +24,24 @@ import numpy as np
 import pytest
 
 from repro import service
-from repro.core import arrivals, solver, timeslot, topology, traffic
+from repro.core import (arrivals, policies, solver, timeslot, topology,
+                        traffic, verify)
 
 GOLDEN_PATH = pathlib.Path(__file__).parent / "golden" / "metrics.json"
 RTOL = 1e-4
+# policy gaps divide by the per-backend LP solve, whose packed cost
+# wiggles ~1e-3 between lowerings — looser envelope than the metrics
+GAP_RTOL = 5e-3
 
 # the pinned grid — small enough to solve tightly in seconds, spanning
 # an electronic DCN and the AWGR PON cell plus both objectives
 GRID = [(topo, obj)
         for topo in ("spine-leaf", "pon3")
         for obj in ("energy", "time")]
+# the pinned policy-gap grid: the heuristic baselines on the same cells
+POLICY_GRID = [(topo, obj, pol)
+               for topo, obj in GRID
+               for pol in ("ecmp", "least-loaded", "scf")]
 SEED = 0
 PATTERN = dict(n_map=4, n_reduce=3, total_gbits=8.0)
 
@@ -50,12 +59,38 @@ def _problem(topo_name: str) -> timeslot.ScheduleProblem:
 
 
 def _solve(topo_name: str, objective: str, backend: str) -> dict:
-    r = solver.solve_fast(_problem(topo_name), objective, backend=backend)
+    p = _problem(topo_name)
+    r = solver.solve_fast(p, objective, backend=backend)
+    # every golden schedule carries a zero-violation feasibility
+    # certificate (capacity / conservation / wavelength / demand
+    # residuals, core.verify) — not just the evaluate() bit
+    verify.check_schedule(p, r.schedule).assert_ok(
+        f"{topo_name}/min-{objective}[{backend}]")
     m = r.metrics
     return {"energy_j": float(m.energy_j),
             "completion_s": float(m.completion_s),
             "fairness_term": float(m.fairness_term),
             "served_gbits": float(m.served.sum()),
+            "feasible": bool(m.feasible)}
+
+
+@functools.lru_cache(maxsize=None)
+def _lp_for_gap(topo_name: str, objective: str, backend: str):
+    p = _problem(topo_name)
+    return p, solver.solve_fast(p, objective, backend=backend)
+
+
+def _policy_gap(topo_name: str, objective: str, pol_name: str,
+                backend: str) -> dict:
+    p_lp, lp = _lp_for_gap(topo_name, objective, backend)
+    p = _problem(topo_name)
+    r = policies.get(pol_name).solve(p, objective, backend=backend)
+    r.certificate.assert_ok(f"{pol_name}/{topo_name}/min-{objective}")
+    m = r.metrics
+    return {"gap_vs_lp": float(policies.gap_vs_lp(objective, p,
+                                                  r.schedule, p_lp, lp)),
+            "energy_j": float(m.energy_j),
+            "completion_s": float(m.completion_s),
             "feasible": bool(m.feasible)}
 
 
@@ -70,7 +105,8 @@ def _service_run(backend: str) -> dict:
     ]
     res = service.run_service(
         tenants, service.ServiceConfig(iters=3000, tol=2e-3,
-                                       backend=backend))
+                                       backend=backend,
+                                       verify_schedules=True))
     assert res.backlog_gbits == 0.0
     return {"total_energy_j": float(res.total_energy_j),
             "makespan_s": float(res.makespan_s),
@@ -123,8 +159,35 @@ def test_golden_service_metrics(backend):
                     f"change is intentional)")
 
 
+@pytest.mark.parametrize("backend", solver.BACKENDS)
+@pytest.mark.parametrize("topo_name,objective,pol_name", POLICY_GRID)
+def test_golden_policy_gaps(topo_name, objective, pol_name, backend):
+    """The pinned optimal-vs-practical grid: each baseline policy's
+    certified schedule and its gap over the LP cannot silently drift on
+    either backend.  Gaps get the looser GAP_RTOL envelope (the LP
+    denominator is backend-dependent); the policy's own metrics are
+    pure numpy and held to the solver RTOL."""
+    want = _golden()[f"policy/{topo_name}/min-{objective}/{pol_name}/"
+                     f"seed{SEED}"]
+    got = _policy_gap(topo_name, objective, pol_name, backend)
+    assert got["feasible"] and want["feasible"]
+    assert got["gap_vs_lp"] >= 1.0 - 1e-4
+    np.testing.assert_allclose(
+        got["gap_vs_lp"], want["gap_vs_lp"], rtol=GAP_RTOL,
+        err_msg=f"policy/{topo_name}/min-{objective}/{pol_name}"
+                f"[{backend}] gap drifted (regen only if intentional)")
+    for key in ("energy_j", "completion_s"):
+        np.testing.assert_allclose(
+            got[key], want[key], rtol=RTOL, atol=1e-9,
+            err_msg=f"policy/{topo_name}/min-{objective}/{pol_name}"
+                    f"[{backend}] {key} drifted")
+
+
 def _regen() -> None:
     doc = {f"{t}/min-{o}/seed{SEED}": _solve(t, o, "xla") for t, o in GRID}
+    doc.update({f"policy/{t}/min-{o}/{pol}/seed{SEED}":
+                _policy_gap(t, o, pol, "xla")
+                for t, o, pol in POLICY_GRID})
     doc[SERVICE_KEY] = _service_run("xla")
     GOLDEN_PATH.parent.mkdir(parents=True, exist_ok=True)
     GOLDEN_PATH.write_text(json.dumps(doc, indent=1, sort_keys=True) + "\n")

@@ -18,12 +18,17 @@ Invariants pinned here:
      permutation of the CoflowSet (and `served` permutes with it);
   4. a zero-flow CoflowSet (an empty arrival epoch) flows through
      build_routing_lp / solve_fast / evaluate as empty-but-valid
-     results instead of raising, on both backends.
+     results instead of raising, on both backends;
+  5. metamorphic policy/LP relations: scaling demands by k scales the
+     min-time functional exactly k and leaves ECMP routing invariant;
+     zeroing one flow never pushes the others' finishes later under
+     the strict-priority packer; the "fair" LP with uniform weights is
+     the energy LP (bitwise arrays, matching schedules).
 """
 import numpy as np
 import pytest
 
-from repro.core import solver, timeslot, topology, traffic
+from repro.core import policies, solver, timeslot, topology, traffic
 from repro.kernels import pdhg_spmv, ref
 
 try:
@@ -123,6 +128,94 @@ def check_evaluate_permutation_invariant(seed: int) -> None:
     np.testing.assert_allclose(m0.psi, m1.psi, rtol=1e-9, atol=1e-12)
 
 
+def _finish_slots(x: np.ndarray) -> np.ndarray:
+    """Per flow: last slot with positive shipped volume (-1 if none)."""
+    ship = x.sum(axis=(1, 2))                       # (F, T)
+    out = np.full(ship.shape[0], -1)
+    for f in range(ship.shape[0]):
+        nz = np.flatnonzero(ship[f] > 1e-9)
+        if nz.size:
+            out[f] = int(nz[-1])
+    return out
+
+
+def check_demand_scaling(seed: int) -> None:
+    """Scaling every demand by k: ECMP's routing is invariant (route
+    choice is demand-oblivious), the min-time LP functional of the
+    packed schedule scales EXACTLY k (volumes scale k along identical
+    routes), and the slot-quantized completion grows by at most ~k."""
+    rng = np.random.default_rng(seed)
+    k = float(rng.uniform(2.0, 4.0))
+    p = _random_problem(rng, str(rng.choice(TOPOS)))
+    cf = p.coflow
+    cfk = traffic.CoflowSet(cf.src, cf.dst, cf.size * k, cf.n_vertices)
+    pk = timeslot.ScheduleProblem(
+        p.topo, cfk, n_slots=timeslot.suggest_n_slots(p.topo, cfk),
+        path_slack=p.path_slack)
+    pol = policies.get("ecmp")
+    _, paths = pol.route(p, "time")
+    _, paths_k = pol.route(pk, "time")
+    assert ([fp.triples.tolist() for fp in paths]
+            == [fp.triples.tolist() for fp in paths_k])
+    r, rk = pol.solve(p, "time"), pol.solve(pk, "time")
+    assert r.remaining_gbits <= 1e-6 and rk.remaining_gbits <= 1e-6
+    np.testing.assert_allclose(
+        policies.lp_cost(pk, "time", rk.schedule),
+        k * policies.lp_cost(p, "time", r.schedule), rtol=1e-9)
+    D = p.topo.slot_duration
+    assert rk.metrics.completion_s >= r.metrics.completion_s - 1e-9
+    assert rk.metrics.completion_s \
+        <= k * r.metrics.completion_s + 2.0 * D + 1e-9
+
+
+def check_zero_flow_monotone(seed: int) -> None:
+    """Zeroing one flow's demand never pushes any other flow's finish
+    slot later under the strict-priority packer (freed capacity only
+    helps; the priority order of the survivors is unchanged)."""
+    rng = np.random.default_rng(seed)
+    p = _random_problem(rng, str(rng.choice(TOPOS)))
+    pol = policies.get("scf")
+    f0 = _finish_slots(pol.solve(p, "time").schedule)
+    j = int(rng.integers(p.coflow.n_flows))
+    size2 = p.coflow.size.copy()
+    size2[j] = 0.0
+    cf2 = traffic.CoflowSet(p.coflow.src, p.coflow.dst, size2,
+                            p.coflow.n_vertices)
+    p2 = timeslot.ScheduleProblem(p.topo, cf2, n_slots=p.n_slots,
+                                  path_slack=p.path_slack)
+    f2 = _finish_slots(pol.solve(p2, "time").schedule)
+    others = np.arange(p.coflow.n_flows) != j
+    assert np.all(f2[others] <= f0[others]), \
+        (j, f0.tolist(), f2.tolist())
+
+
+def check_fair_lp_matches_energy(seed: int, *, solve: bool = False) -> None:
+    """The weighted max-min fairness LP degenerates to the energy LP:
+    with flow_weight=None the assembled arrays are bitwise identical;
+    with a uniform weight w only the triple-cost coordinates scale by
+    1/w (which cscale normalization erases — the schedules match)."""
+    rng = np.random.default_rng(seed)
+    p = _random_problem(rng, str(rng.choice(TOPOS)))
+    lp_e, idx = solver.build_routing_lp(p, "energy")
+    lp_f, _ = solver.build_routing_lp(p, "fair")      # weights None
+    for attr in ("c", "row", "col", "val", "b", "h"):
+        np.testing.assert_array_equal(getattr(lp_e, attr),
+                                      getattr(lp_f, attr), err_msg=attr)
+    w = float(rng.uniform(0.5, 4.0))
+    pw = timeslot.ScheduleProblem(
+        p.topo, p.coflow, n_slots=p.n_slots, path_slack=p.path_slack,
+        flow_weight=np.full(p.coflow.n_flows, w))
+    lp_w, _ = solver.build_routing_lp(pw, "fair")
+    K = len(idx.kf)
+    np.testing.assert_allclose(lp_w.c[:K], lp_e.c[:K] / w, rtol=1e-12)
+    np.testing.assert_array_equal(lp_w.c[K:], lp_e.c[K:])
+    if solve:
+        r_f = solver.solve_fast(pw, "fair", iters=800)
+        r_e = solver.solve_fast(p, "energy", iters=800)
+        np.testing.assert_allclose(r_f.schedule, r_e.schedule,
+                                   rtol=1e-7, atol=1e-9)
+
+
 # ---------------------------------------------------------------------------
 # seeded deterministic sweeps (always run)
 # ---------------------------------------------------------------------------
@@ -140,6 +233,21 @@ def test_path_decompose_conserves_volume(seed):
 @pytest.mark.parametrize("seed", range(4))
 def test_evaluate_permutation_invariant(seed):
     check_evaluate_permutation_invariant(seed)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_demand_scaling_metamorphic(seed):
+    check_demand_scaling(seed)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_zero_flow_monotone_metamorphic(seed):
+    check_zero_flow_monotone(seed)
+
+
+@pytest.mark.parametrize("seed", range(2))
+def test_fair_lp_matches_energy(seed):
+    check_fair_lp_matches_energy(seed, solve=(seed == 0))
 
 
 # ---------------------------------------------------------------------------
@@ -166,6 +274,18 @@ if HAVE_HYPOTHESIS:
     @given(seed=seeds)
     def test_evaluate_permutation_invariant_hyp(seed):
         check_evaluate_permutation_invariant(seed)
+
+    @needs_hypothesis
+    @settings(max_examples=6, deadline=None)
+    @given(seed=seeds)
+    def test_demand_scaling_metamorphic_hyp(seed):
+        check_demand_scaling(seed)
+
+    @needs_hypothesis
+    @settings(max_examples=6, deadline=None)
+    @given(seed=seeds)
+    def test_fair_lp_matches_energy_hyp(seed):
+        check_fair_lp_matches_energy(seed)
 
 
 # ---------------------------------------------------------------------------
