@@ -187,12 +187,28 @@ _pdhg_resume = functools.partial(jax.jit, static_argnames=(
 # docs/SOLVER.md "Backends" and docs/KERNELS.md).
 
 BACKENDS = ("xla", "pallas")
+PRECISIONS = ("fp32", "bf16")
 
 
 def _check_backend(backend: str) -> None:
     if backend not in BACKENDS:
         raise ValueError(f"unknown solver backend {backend!r}; "
                          f"have {BACKENDS}")
+
+
+def _check_scale_opts(backend: str, shards: int, precision: str) -> None:
+    """Validate the scale knobs: both the sharded operator and the bf16
+    iterate storage exist only in the blocked-ELL lowering, so anything
+    but the defaults requires backend="pallas"."""
+    if precision not in PRECISIONS:
+        raise ValueError(f"unknown precision {precision!r}; "
+                         f"have {PRECISIONS}")
+    if shards < 1:
+        raise ValueError(f"shards must be >= 1, got {shards}")
+    if backend != "pallas" and (shards > 1 or precision != "fp32"):
+        raise ValueError(
+            f"shards={shards}, precision={precision!r} require "
+            f"backend='pallas' (the xla COO path is single-device fp32)")
 
 
 def _solve_lp_trivial(lp: StructuredLP) -> PDHGResult:
@@ -275,7 +291,8 @@ def _pack_pallas(c, row, col, val, b, h, xmax, m_eq):
 
 
 def _solve_lp_pallas(lp: StructuredLP, iters: int, tol: float,
-                     max_restarts: int, x0, y0) -> PDHGResult:
+                     max_restarts: int, x0, y0,
+                     precision: str = "fp32") -> PDHGResult:
     """solve_lp's restart ladder with each rung one fused Pallas burst."""
     from repro.kernels import ops as kops
 
@@ -293,7 +310,86 @@ def _solve_lp_pallas(lp: StructuredLP, iters: int, tol: float,
     for attempt in range(max_restarts + 1):
         x, y, worst = kops.pdhg_burst(
             *vecs, keep_n, keep_m, *ell, x, y,
-            row_meta=op.rows.meta, col_meta=op.cols.meta, iters=iters)
+            row_meta=op.rows.meta, col_meta=op.cols.meta, iters=iters,
+            precision=precision)
+        total_iters += iters
+        primal = float(jnp.max(worst))        # padded rows contribute 0
+        if primal <= tol:
+            break
+        iters *= 2
+    x_np = np.asarray(x)[:lp.n].astype(np.float64)
+    y_np = np.asarray(y)[:lp.m].astype(np.float64)
+    obj = float(lp.c @ x_np) / cscale
+    gap = abs(obj + float(np.concatenate([lp.b, lp.h]) @ y_np)) \
+        / (1.0 + abs(obj))
+    return PDHGResult(x_np, primal, gap, total_iters, y=y_np)
+
+
+def _pack_pallas_sharded(c, row, col, val, b, h, xmax, m_eq, shards):
+    """_pack_pallas for the row-block-sharded operator: same tau/sig/q/ub
+    formulas, but the y-side vectors are padded to shards*m_loc (the
+    concatenation of the per-shard row blocks) and the ELL tables come
+    from ell_pack_sharded (per-shard widths unified so shard_map traces
+    one program).  Padded rows carry sig=q=0 / ub=True exactly as in the
+    single-device pack, so they never move and never pollute psum."""
+    from repro.kernels import pdhg_spmv
+
+    n, m = len(c), len(b) + len(h)
+    op = pdhg_spmv.ell_pack_sharded(row, col, val, m, n, shards)
+    q = np.concatenate([b, h])
+    abs_val = np.abs(val)
+    col_sum = np.zeros(n)
+    np.add.at(col_sum, col, abs_val)
+    row_sum = np.zeros(m)
+    np.add.at(row_sum, row, abs_val)
+    tau = 1.0 / np.maximum(col_sum, 1e-12)
+    sig = 1.0 / np.maximum(row_sum, 1e-12)
+    ub = np.arange(m) >= m_eq
+
+    def padn(a):
+        return jnp.asarray(np.pad(np.asarray(a, np.float32),
+                                  (0, op.n_pad - n)))
+
+    def padm(a):
+        return jnp.asarray(np.pad(np.asarray(a, np.float32),
+                                  (0, op.m_pad - m)))
+
+    vecs = (padn(c), padn(tau), padn(xmax), padm(q), padm(sig),
+            jnp.asarray(np.pad(ub, (0, op.m_pad - m), constant_values=True)))
+    ell = tuple(jnp.asarray(a) for a in (op.row_idx, op.row_val,
+                                         op.col_idx, op.col_val))
+    return op, vecs, ell
+
+
+def _solve_lp_pallas_sharded(lp: StructuredLP, iters: int, tol: float,
+                             max_restarts: int, x0, y0, shards: int,
+                             precision: str = "fp32") -> PDHGResult:
+    """_solve_lp_pallas with the [eq; ub] rows partitioned across `shards`
+    devices (runtime.sharding.solver_mesh) and each burst a shard_map'd
+    program with one psum per iteration for K^T.y.  Only engaged for
+    shards > 1 — solve_lp routes shards=1 through _solve_lp_pallas so
+    the single-device trajectory stays bit-for-bit untouched."""
+    from repro.kernels import ops as kops
+    from repro.runtime.sharding import solver_mesh
+
+    mesh = solver_mesh(shards)
+    xmax = np.where(np.isfinite(lp.xmax), lp.xmax, 1e12)
+    cscale = max(float(np.abs(lp.c).max(initial=0.0)), 1e-12)
+    op, vecs, ell = _pack_pallas_sharded(lp.c / cscale, lp.row, lp.col,
+                                         lp.val, lp.b, lp.h, xmax, lp.m_eq,
+                                         shards)
+    keep_n = jnp.zeros(op.n_pad, bool)
+    keep_m = jnp.zeros(op.m_pad, bool)
+    x = jnp.zeros(op.n_pad) if x0 is None else jnp.asarray(
+        np.pad(np.asarray(x0, np.float32), (0, op.n_pad - lp.n)))
+    y = jnp.zeros(op.m_pad) if y0 is None else jnp.asarray(
+        np.pad(np.asarray(y0, np.float32), (0, op.m_pad - lp.m)))
+    total_iters = 0
+    for attempt in range(max_restarts + 1):
+        x, y, worst = kops.pdhg_burst_sharded(
+            mesh, *vecs, keep_n, keep_m, *ell, x, y,
+            row_meta=op.row_meta, col_meta=op.col_meta, iters=iters,
+            precision=precision)
         total_iters += iters
         primal = float(jnp.max(worst))        # padded rows contribute 0
         if primal <= tol:
@@ -392,7 +488,8 @@ def solve_lp(lp: StructuredLP, iters: int = 4000, *,
              tol: float | None = None, max_restarts: int = 3,
              x0: np.ndarray | None = None,
              y0: np.ndarray | None = None,
-             backend: str = "xla") -> PDHGResult:
+             backend: str = "xla", shards: int = 1,
+             precision: str = "fp32") -> PDHGResult:
     """Solve with PDHG; objective is max-normalized (the schedule is re-scored
     exactly afterwards, so only the argmin matters).  If the primal residual
     exceeds `tol`, continue the trajectory with doubled iterations (warm
@@ -403,14 +500,27 @@ def solve_lp(lp: StructuredLP, iters: int = 4000, *,
     `backend` selects the PDHG lowering: "xla" (default, COO scatters,
     bit-for-bit the historical trajectory) or "pallas" (fused blocked-ELL
     bursts via repro.kernels.pdhg_spmv; same math, fp-level differences
-    only — see docs/SOLVER.md "Backends")."""
+    only — see docs/SOLVER.md "Backends").
+
+    `shards` > 1 partitions the constraint rows across that many devices
+    (runtime.sharding.solver_mesh — on CPU requires
+    XLA_FLAGS=--xla_force_host_platform_device_count); `precision="bf16"`
+    stores the PDHG iterates in bfloat16 between iterations with fp32
+    arithmetic and residuals.  Both require backend="pallas"; the
+    defaults (shards=1, fp32) leave every existing trajectory bit-for-bit
+    untouched — see docs/SOLVER.md §9."""
     _check_backend(backend)
+    _check_scale_opts(backend, shards, precision)
     if tol is None:
         tol = 1e-4 * max(float(np.abs(lp.b).max(initial=0.0)), 1.0)
     if lp.n == 0 or lp.m == 0:
         return _solve_lp_trivial(lp)
     if backend == "pallas":
-        return _solve_lp_pallas(lp, iters, tol, max_restarts, x0, y0)
+        if shards > 1:
+            return _solve_lp_pallas_sharded(lp, iters, tol, max_restarts,
+                                            x0, y0, shards, precision)
+        return _solve_lp_pallas(lp, iters, tol, max_restarts, x0, y0,
+                                precision)
     xmax = np.where(np.isfinite(lp.xmax), lp.xmax, 1e12)
     cscale = max(float(np.abs(lp.c).max(initial=0.0)), 1e-12)
     args = (jnp.asarray(lp.c / cscale), jnp.asarray(lp.row),
@@ -1349,7 +1459,8 @@ def _assemble_fast_result(p: ScheduleProblem, lp: StructuredLP,
 
 def solve_fast(p: ScheduleProblem, objective: str = "energy", *,
                iters: int = 4000, tol: float | None = None,
-               backend: str = "xla") -> FastPathResult:
+               backend: str = "xla", shards: int = 1,
+               precision: str = "fp32") -> FastPathResult:
     """Single-instance fast path: routing LP -> PDHG -> slot packing ->
     exact re-scoring.
 
@@ -1364,6 +1475,10 @@ def solve_fast(p: ScheduleProblem, objective: str = "energy", *,
       tol: primal-residual target in Gbits; default 1e-4 * max demand.
       backend: PDHG lowering, "xla" (default) or "pallas" (fused
         blocked-ELL bursts; see docs/SOLVER.md "Backends").
+      shards: row-partition the LP across this many devices (pallas
+        only; see docs/SOLVER.md §9).
+      precision: "fp32" (default) or "bf16" iterate storage (pallas
+        only; arithmetic and residuals stay fp32).
 
     Returns a FastPathResult whose `metrics` are always the exact paper
     equations evaluated on the packed schedule — never LP estimates.
@@ -1374,7 +1489,8 @@ def solve_fast(p: ScheduleProblem, objective: str = "energy", *,
     schedules.  The two backends agree to fp tolerance (~1e-4 relative
     on metrics), not bitwise."""
     lp, idx = build_routing_lp(p, objective)
-    res = solve_lp(lp, iters=iters, tol=tol, backend=backend)
+    res = solve_lp(lp, iters=iters, tol=tol, backend=backend,
+                   shards=shards, precision=precision)
     return _assemble_fast_result(p, lp, idx, res)
 
 
@@ -1548,7 +1664,8 @@ def solve_lp_batch(lps: list[StructuredLP], iters: int = 4000, *,
                    adaptive: bool = True, chunk: int = 500,
                    warm_starts: list[tuple[np.ndarray, np.ndarray]] | None
                    = None, backend: str = "xla",
-                   bucket: bool = True) -> list[PDHGResult]:
+                   bucket: bool = True, shards: int = 1,
+                   precision: str = "fp32") -> list[PDHGResult]:
     """Solve a batch of LPs over the instance axis in one jitted PDHG
     dispatch (block-diagonal stacking; see BlockStackedLP for why this
     beats a literal vmap on CPU).
@@ -1587,8 +1704,16 @@ def solve_lp_batch(lps: list[StructuredLP], iters: int = 4000, *,
     executable instead of recompiling per exact shape.  The padding is
     value-neutral (see _pad_for_buckets), so results match the
     unbucketed dispatch to fp reduction order; `bucket=False` restores
-    exact-shape dispatches."""
+    exact-shape dispatches.
+
+    `shards` > 1 row-partitions each stacked dispatch across that many
+    devices and runs fixed sharded bursts (no in-dispatch adaptive loop —
+    the outer re-stacking ladder plus the host-side per-instance
+    residual check provides the convergence control); `precision="bf16"`
+    stores iterates in bfloat16 between iterations.  Both require
+    backend="pallas" (see solve_lp)."""
     _check_backend(backend)
+    _check_scale_opts(backend, shards, precision)
     B = len(lps)
     all_tols = np.array([tol if tol is not None
                          else 1e-4 * max(float(np.abs(lp.b).max(initial=0.0)),
@@ -1601,6 +1726,26 @@ def solve_lp_batch(lps: list[StructuredLP], iters: int = 4000, *,
         the stacked LP into blocked-ELL once per dispatch shape, then run
         the fused adaptive loop (or one fixed burst) via repro.kernels."""
         from repro.kernels import ops as kops
+
+        if shards > 1:
+            # sharded dispatch: fixed bursts over the row-partitioned
+            # operator; the outer ladder's host-side residual check and
+            # re-stacking supply the adaptive control
+            from repro.runtime.sharding import solver_mesh
+
+            mesh = solver_mesh(shards)
+            op, vecs, ell = _pack_pallas_sharded(
+                g.c, g.row, g.col, g.val, g.b, g.h, g.xmax, g.m_eq, shards)
+            _note_dispatch(("pallas-sharded", shards, precision, budget,
+                            op.n_pad, op.m_pad, len(sub)))
+            x0p = jnp.pad(x0.astype(jnp.float32), (0, op.n_pad - g.n))
+            y0p = jnp.pad(y0.astype(jnp.float32), (0, op.m_pad - g.m))
+            x, y, _ = kops.pdhg_burst_sharded(
+                mesh, *vecs, jnp.zeros(op.n_pad, bool),
+                jnp.zeros(op.m_pad, bool), *ell, x0p, y0p,
+                row_meta=op.row_meta, col_meta=op.col_meta, iters=budget,
+                precision=precision)
+            return x, y, np.full(len(sub), budget)
 
         op, vecs, ell = _pack_pallas(g.c, g.row, g.col, g.val, g.b, g.h,
                                      g.xmax, g.m_eq)
@@ -1623,13 +1768,13 @@ def solve_lp_batch(lps: list[StructuredLP], iters: int = 4000, *,
                 jnp.asarray(inst_n), jnp.asarray(inst_m),
                 num_inst=len(sub), row_meta=op.rows.meta,
                 col_meta=op.cols.meta, chunk=chunk,
-                max_chunks=budget // chunk)
+                max_chunks=budget // chunk, precision=precision)
             used = np.asarray(used_chunks) * chunk
         else:
             x, y, _ = kops.pdhg_burst(
                 *vecs, jnp.zeros(op.n_pad, bool), jnp.zeros(op.m_pad, bool),
                 *ell, x0p, y0p, row_meta=op.rows.meta,
-                col_meta=op.cols.meta, iters=budget)
+                col_meta=op.cols.meta, iters=budget, precision=precision)
             used = np.full(len(sub), budget)
         return x, y, used
 
@@ -1779,7 +1924,8 @@ def solve_fast_batch(problems: list[ScheduleProblem],
                      objective: str = "energy", *,
                      iters: int = 4000, tol: float | None = None,
                      adaptive: bool = True, backend: str = "xla",
-                     bucket: bool = True) -> list[FastPathResult]:
+                     bucket: bool = True, shards: int = 1,
+                     precision: str = "fp32") -> list[FastPathResult]:
     """Batched fast path over ScheduleProblems sharing one topology.
 
     The routing LPs (which differ per instance through task placement and
@@ -1807,7 +1953,8 @@ def solve_fast_batch(problems: list[ScheduleProblem],
                              f"structure; got {t0.name} and {t.name}")
     return solve_fast_ensemble(problems, objective, iters=iters, tol=tol,
                                adaptive=adaptive, chunk=500, backend=backend,
-                               bucket=bucket)
+                               bucket=bucket, shards=shards,
+                               precision=precision)
 
 
 # ---------------------------------------------------------------------------
@@ -1960,7 +2107,8 @@ def project_warm_start(warm: FastPathResult, p_dst: ScheduleProblem,
 def resolve_incremental(p: ScheduleProblem, objective: str,
                         warm: FastPathResult, *, iters: int = 4000,
                         tol: float | None = None,
-                        backend: str = "xla") -> FastPathResult:
+                        backend: str = "xla", shards: int = 1,
+                        precision: str = "fp32") -> FastPathResult:
     """Re-solve a degraded instance starting from a healthy solution.
 
     `p` is the degraded problem (same coflow/flow indexing as the healthy
@@ -1972,7 +2120,8 @@ def resolve_incremental(p: ScheduleProblem, objective: str,
     itself warm-start further re-solves (cascading failures)."""
     lp, idx = build_routing_lp(p, objective)
     x0, y0 = project_warm_start(warm, p, lp, idx)
-    res = solve_lp(lp, iters=iters, tol=tol, x0=x0, y0=y0, backend=backend)
+    res = solve_lp(lp, iters=iters, tol=tol, x0=x0, y0=y0, backend=backend,
+                   shards=shards, precision=precision)
     return _assemble_fast_result(p, lp, idx, res)
 
 
@@ -1981,7 +2130,8 @@ def solve_fast_warm(p: ScheduleProblem, objective: str = "energy", *,
                     flow_map: np.ndarray | None = None,
                     iters: int = 4000, tol: float | None = None,
                     chunk: int = 250, backend: str = "xla",
-                    bucket: bool = True) -> FastPathResult:
+                    bucket: bool = True, shards: int = 1,
+                    precision: str = "fp32") -> FastPathResult:
     """Single-instance fast path with an optional projected warm start and
     the fused adaptive convergence loop.
 
@@ -2013,7 +2163,8 @@ def solve_fast_warm(p: ScheduleProblem, objective: str = "energy", *,
             warm_starts = None         # structure changed -> cold start
     res = solve_lp_batch([lp], iters=iters, tol=tol, chunk=chunk,
                          warm_starts=warm_starts, backend=backend,
-                         bucket=bucket)[0]
+                         bucket=bucket, shards=shards,
+                         precision=precision)[0]
     out = _assemble_fast_result(p, lp, idx, res)
     out.warm_started = warm_starts is not None
     return out
@@ -2025,7 +2176,8 @@ def solve_fast_ensemble(problems: list[ScheduleProblem],
                         iters: int = 4000, tol: float | None = None,
                         adaptive: bool = True, chunk: int | None = None,
                         backend: str = "xla",
-                        bucket: bool = True) -> list[FastPathResult]:
+                        bucket: bool = True, shards: int = 1,
+                        precision: str = "fp32") -> list[FastPathResult]:
     """Batched fast path over a (possibly heterogeneous) instance list.
 
     Unlike solve_fast_batch this does not require a shared topology —
@@ -2053,7 +2205,8 @@ def solve_fast_ensemble(problems: list[ScheduleProblem],
         chunk = 250 if warm_starts is not None else 500
     results = solve_lp_batch(lps, iters=iters, tol=tol, adaptive=adaptive,
                              chunk=chunk, warm_starts=warm_starts,
-                             backend=backend, bucket=bucket)
+                             backend=backend, bucket=bucket, shards=shards,
+                             precision=precision)
     return [_assemble_fast_result(p, lp, idx, res)
             for p, (lp, idx), res in zip(problems, built, results)]
 
@@ -2065,7 +2218,8 @@ def solve_fast_group(problems: list[ScheduleProblem],
                      iters: int = 4000, tol: float | None = None,
                      adaptive: bool = True, chunk: int = 250,
                      backend: str = "xla",
-                     bucket: bool = True) -> list[FastPathResult]:
+                     bucket: bool = True, shards: int = 1,
+                     precision: str = "fp32") -> list[FastPathResult]:
     """One stacked dispatch over a heterogeneous tenant group.
 
     The coalescing primitive of the multi-tenant scheduler service
@@ -2122,7 +2276,8 @@ def solve_fast_group(problems: list[ScheduleProblem],
     results = solve_lp_batch(lps, iters=iters, tol=tol, adaptive=adaptive,
                              chunk=chunk,
                              warm_starts=starts if any(flags) else None,
-                             backend=backend, bucket=bucket)
+                             backend=backend, bucket=bucket, shards=shards,
+                             precision=precision)
     out = []
     for (p, (lp, idx), res, f) in zip(problems, built, results, flags):
         r = _assemble_fast_result(p, lp, idx, res)

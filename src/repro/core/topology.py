@@ -224,6 +224,47 @@ def dcell(n: int = 4, slot_duration: float = 1.0,
                    task_servers=flat[:n_task_servers], switch_sigma=sigma)
 
 
+def _dcell_cell(b: _Builder, n: int, level: int, prefix: str) -> list[int]:
+    """Recursively build one DCell_level into `b`; returns its servers in
+    flat order (the order the DCell construction indexes them by)."""
+    if level == 0:
+        sw = b.add(f"{prefix}sw", KIND_SWITCH, O_SG500)
+        servers = [b.add(f"{prefix}srv{i}", KIND_SERVER, P_NIC, EPS_NIC)
+                   for i in range(n)]
+        for s in servers:
+            b.link(s, sw, _grey())
+        return servers
+    first = _dcell_cell(b, n, level - 1, f"{prefix}c0.")
+    g = len(first) + 1                 # g_l = t_{l-1} + 1 sub-cells
+    subs = [first] + [_dcell_cell(b, n, level - 1, f"{prefix}c{a}.")
+                      for a in range(1, g)]
+    # level-l interconnect: sub-cell a server (a2-1) <-> sub-cell a2
+    # server (a) — each server gains exactly one link per level, so a
+    # DCell_l contributes t_l/2 new bidirectional links
+    for a, a2 in itertools.combinations(range(g), 2):
+        b.link(subs[a][a2 - 1], subs[a2][a], _grey())
+    return [s for sub in subs for s in sub]
+
+
+def dcell_multi(n: int = 2, levels: int = 2,
+                slot_duration: float = 1.0) -> Topology:
+    """Multi-level DCell_levels(n) (DCell paper §2; generalizes `dcell`).
+
+    Server counts grow doubly-exponentially: t_0 = n, t_l = (t_{l-1}+1)
+    * t_{l-1}.  Every server has degree levels+1 (one switch port plus
+    one port per level); there are t_levels/n level-0 switches and
+    t_levels * (2 + levels) directed edges.  All servers take tasks
+    (unlike the 20-server paper instance, which idles 4)."""
+    if levels < 1:
+        raise ValueError(f"levels must be >= 1, got {levels}")
+    b = _Builder(f"dcell-l{levels}-n{n}")
+    _dcell_cell(b, n, levels, "")
+    sigma = {i: n * LINK_GBPS for i, d in enumerate(b.devices)
+             if d.kind == KIND_SWITCH}
+    return b.build(n_wavelengths=1, slot_duration=slot_duration,
+                   switch_sigma=sigma)
+
+
 # ---------------------------------------------------------------------------
 # PON-based DCNs (Fig. 5)
 # ---------------------------------------------------------------------------
@@ -340,13 +381,107 @@ def pon5(n_racks: int = 4, servers_per_rack: int = 4,
                    switch_sigma=sigma)
 
 
+def awgr_lambda(G: int) -> np.ndarray:
+    """Cyclic AWGR wavelength-routing table for G communicating vertices.
+
+    lam[s][d] = (d - s - 1) mod G for s != d (-1 on the diagonal): a
+    latin square over wavelengths 0..G-2 — every row and every column
+    uses each wavelength at most once, which is exactly the AWGR's
+    physical constraint (one wavelength per ingress and per egress
+    port).  awgr_lambda(5) is wavelength-equivalent to the §III MILP
+    output TABLE_I_LAMBDA up to relabeling; this closed form scales the
+    cell to any G."""
+    d = np.arange(G)
+    lam = (d[None, :] - d[:, None] - 1) % G
+    np.fill_diagonal(lam, -1)
+    return lam
+
+
+def pon_multicell(n_cells: int = 2, n_racks: int = 4,
+                  servers_per_rack: int = 4,
+                  slot_duration: float = 0.25) -> Topology:
+    """Multi-cell AWGR-centric PON DCN (PON3 cells behind a WDM hub).
+
+    Each cell is a pon3 instance — racks with polymer backplanes,
+    tunable-TX servers, a cyclic-AWGR wavelength fabric (awgr_lambda)
+    and an OLT card — and the cells' OLT cards interconnect through a
+    central OLT hub chassis over full-WDM trunks (all n_racks
+    wavelengths both ways), the paper's scale-out story for PON cells.
+    Same uniform schema: directional AWGR edges, servers never relay
+    (eq. 46), one wavelength per server TX per slot (eq. 47)."""
+    if n_cells < 1:
+        raise ValueError(f"n_cells must be >= 1, got {n_cells}")
+    G = n_racks + 1
+    lam = awgr_lambda(G)
+    n_w = n_racks                      # G-1 wavelengths per cell
+    b = _Builder(f"pon-multicell-{n_cells}x{n_racks}")
+    hub = b.add("olt-hub", KIND_SWITCH, O_OLT)
+    awgr_ins: list[int] = []
+    bps_all: list[int] = []
+    cards: list[int] = []
+    for cell in range(n_cells):
+        olt = b.add(f"olt{cell}", KIND_SWITCH, O_OLT)
+        cards.append(olt)
+        # WDM trunk to the hub: every wavelength, both directions
+        b.edges.append((olt, hub)); b.caps.append(np.full(n_w, LINK_GBPS))
+        b.edges.append((hub, olt)); b.caps.append(np.full(n_w, LINK_GBPS))
+        ins, outs = [], []
+        for r in range(n_racks):
+            bp = b.add(f"backplane{cell}.{r}", KIND_SWITCH, O_BACKPLANE)
+            ain = b.add(f"awgr_in{cell}.{r}", KIND_PASSIVE)
+            aout = b.add(f"awgr_out{cell}.{r}", KIND_PASSIVE)
+            bps_all.append(bp); ins.append(ain); outs.append(aout)
+            for i in range(servers_per_rack):
+                sv = b.add(f"srv{cell}.{r}.{i}", KIND_SERVER, P_TUNABLE)
+                b.link(sv, bp, _grey(n_w))
+                b.edges.append((sv, ain))
+                b.caps.append(np.full(n_w, LINK_GBPS))
+                b.edges.append((aout, sv))
+                b.caps.append(np.full(n_w, LINK_GBPS))
+        olt_in = b.add(f"awgr_in_olt{cell}", KIND_PASSIVE)
+        olt_out = b.add(f"awgr_out_olt{cell}", KIND_PASSIVE)
+        b.edges.append((olt, olt_in)); b.caps.append(np.full(n_w, LINK_GBPS))
+        b.edges.append((olt_out, olt)); b.caps.append(np.full(n_w, LINK_GBPS))
+        ins_all = ins + [olt_in]
+        outs_all = outs + [olt_out]
+        for s in range(G):
+            for d_ in range(G):
+                if s == d_:
+                    continue
+                row = np.zeros(n_w)
+                row[int(lam[s, d_])] = LINK_GBPS
+                b.edges.append((ins_all[s], outs_all[d_]))
+                b.caps.append(row)
+        awgr_ins += ins_all
+
+    edges = np.asarray(b.edges, dtype=np.int32)
+    cap = np.stack(b.caps)
+    topo = Topology(
+        name=b.name, devices=b.devices, edges=edges, cap=cap,
+        n_wavelengths=n_w, slot_duration=slot_duration,
+        task_servers=[i for i, d in enumerate(b.devices)
+                      if d.kind == KIND_SERVER],
+        server_relay=False, one_wavelength_tx=True,
+        awgr_in_ports=awgr_ins,
+        switch_sigma={hub: n_cells * n_racks * LINK_GBPS,
+                      **{c: n_racks * LINK_GBPS for c in cards},
+                      **{bp: servers_per_rack * LINK_GBPS
+                         for bp in bps_all}})
+    # NOTE: like pon3, AWGR paths are one-way, so Topology.validate()'s
+    # bidirectional check is skipped.
+    assert cap.shape == (edges.shape[0], n_w)
+    return topo
+
+
 BUILDERS = {
     "fat-tree": fat_tree,
     "spine-leaf": spine_leaf,
     "bcube": bcube,
     "dcell": dcell,
+    "dcell-multi": dcell_multi,
     "pon3": pon3,
     "pon5": pon5,
+    "pon-multicell": pon_multicell,
 }
 
 

@@ -61,33 +61,37 @@ def rglru(a, b, h0=None, *, interpret: bool | None = None):
 # ---------------------------------------------------------------------------
 
 @functools.partial(jax.jit, static_argnames=("row_meta", "col_meta", "iters",
-                                             "interpret"))
+                                             "interpret", "precision"))
 def pdhg_burst(c, tau, xmax, q, sig, ub, keep_n, keep_m,
                row_idx, row_val, col_idx, col_val, x0, y0, *,
                row_meta: tuple, col_meta: tuple, iters: int,
-               interpret: bool | None = None):
+               interpret: bool | None = None, precision: str = "fp32"):
     """One fused `iters`-iteration PDHG burst (kernels.pdhg_spmv).
 
     Arrays are storage-padded (x side n_pad, y side m_pad); returns
     (x, y, worst) with `worst` the terminal per-row residual vector
     computed in-kernel.  `keep_n`/`keep_m` freeze coordinates (True =
-    hold), matching core.solver's adaptive batch semantics."""
+    hold), matching core.solver's adaptive batch semantics.
+    `precision="bf16"` stores the iterates in bfloat16 between
+    iterations (fp32 arithmetic and residuals — see pdhg_update_burst);
+    the default "fp32" trace is unchanged."""
     if interpret is None:
         interpret = not _on_tpu()
     return ps.pdhg_burst(c, tau, xmax, q, sig, ub, keep_n, keep_m,
                          row_idx, row_val, col_idx, col_val, x0, y0,
                          row_meta=row_meta, col_meta=col_meta, iters=iters,
-                         interpret=interpret)
+                         interpret=interpret, precision=precision)
 
 
 @functools.partial(jax.jit, static_argnames=("row_meta", "col_meta",
                                              "num_inst", "chunk",
-                                             "max_chunks", "interpret"))
+                                             "max_chunks", "interpret",
+                                             "precision"))
 def pdhg_adaptive(c, tau, xmax, q, sig, ub, row_idx, row_val, col_idx,
                   col_val, x0, y0, tols, inst_n, inst_m, *,
                   num_inst: int, row_meta: tuple, col_meta: tuple,
                   chunk: int, max_chunks: int,
-                  interpret: bool | None = None):
+                  interpret: bool | None = None, precision: str = "fp32"):
     """Adaptive PDHG over a block-stacked instance batch, Pallas bursts.
 
     The exact semantics of core.solver._pdhg_run_adaptive — `chunk`-
@@ -109,7 +113,7 @@ def pdhg_adaptive(c, tau, xmax, q, sig, ub, row_idx, row_val, col_idx,
             c, tau, xmax, q, sig, ub, frozen_ext[inst_n], frozen_ext[inst_m],
             row_idx, row_val, col_idx, col_val, x, y,
             row_meta=row_meta, col_meta=col_meta, iters=chunk,
-            interpret=interpret)
+            interpret=interpret, precision=precision)
 
     def residuals(worst):
         return jax.ops.segment_max(worst, inst_m,
@@ -132,3 +136,55 @@ def pdhg_adaptive(c, tau, xmax, q, sig, ub, row_idx, row_val, col_idx,
               jnp.zeros(num_inst, dtype=jnp.int32))
     x, y, worst, _, _, used = jax.lax.while_loop(cond, step, state0)
     return x, y, residuals(worst), used
+
+
+@functools.lru_cache(maxsize=64)
+def _sharded_burst_fn(mesh, axis: str, row_meta: tuple, col_meta: tuple,
+                      iters: int, precision: str):
+    """Build (and cache) the jitted shard_map program for one static
+    configuration — mesh, layout meta, burst length, precision.  Cached
+    on those statics so repeated bursts (the solver's restart ladder)
+    reuse one compiled executable instead of re-tracing per call."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.runtime.collectives import shard_map
+
+    rep, shd = P(), P(axis)
+
+    def inner(c, tau, xmax, q, sig, ub, keep_n, keep_m,
+              row_idx, row_val, col_idx, col_val, x0, y0):
+        return ps.pdhg_update_burst_sharded(
+            x0, y0, c, tau, xmax, q, sig, ub, keep_n, keep_m,
+            row_idx, row_val, col_idx, col_val, row_meta=row_meta,
+            col_meta=col_meta, iters=iters, axis=axis, precision=precision)
+
+    fn = shard_map(
+        inner, mesh=mesh,
+        in_specs=(rep, rep, rep, shd, shd, shd, rep, shd,
+                  shd, shd, shd, shd, rep, shd),
+        out_specs=(rep, shd, shd), check_rep=False)
+    return jax.jit(fn)
+
+
+def pdhg_burst_sharded(mesh, c, tau, xmax, q, sig, ub, keep_n, keep_m,
+                       row_idx, row_val, col_idx, col_val, x0, y0, *,
+                       row_meta: tuple, col_meta: tuple, iters: int,
+                       precision: str = "fp32"):
+    """One fused PDHG burst over a row-block-sharded operator.
+
+    `mesh` is a 1-D jax.sharding.Mesh (see runtime.sharding.solver_mesh)
+    whose single axis partitions the [eq; ub] rows; the operand layout
+    is kernels.pdhg_spmv.ell_pack_sharded's: x-side arrays replicated
+    (length n_pad), y-side arrays and the per-shard ELL tables flat with
+    a leading extent divisible by the mesh size (shard-major).  Each
+    device runs the shared update body on its row slice; K^T.y is the
+    one psum per iteration (kernels.pdhg_spmv.pdhg_update_burst_sharded).
+    Returns (x, y, worst) in the same global layout as pdhg_burst.
+
+    This path never engages for mesh size 1 — core.solver routes
+    shards=1 to the single-device pallas burst, keeping that trajectory
+    bit-for-bit untouched."""
+    fn = _sharded_burst_fn(mesh, mesh.axis_names[0], row_meta, col_meta,
+                           iters, precision)
+    return fn(c, tau, xmax, q, sig, ub, keep_n, keep_m,
+              row_idx, row_val, col_idx, col_val, x0, y0)

@@ -97,14 +97,21 @@ class EllPlanSide:
 
 
 def ell_blocks_plan(row: np.ndarray, col: np.ndarray, n_rows: int, *,
-                    bm: int = 8, align: int = 8) -> EllPlanSide:
+                    bm: int = 8, align: int = 8,
+                    min_widths: np.ndarray | None = None) -> EllPlanSide:
     """Lay out COO entries (keyed by `row`) in blocked-ELL storage.
 
     Entries keep their COO appearance order within each row (stable
     sort), so repeated packs of the same operator are bit-identical.
     `bm` rows per block; each block's width is its max row degree rounded
     up to a multiple of `align` (>= align even for all-empty blocks, so
-    every block is addressable with one static-shape gather)."""
+    every block is addressable with one static-shape gather).
+
+    `min_widths` (one entry per block, already align-rounded) forces each
+    block at least that wide — the sharded packer uses it to give every
+    shard's pack identical static meta (the elementwise max of the
+    per-shard widths), so `shard_map` traces one program for all shards.
+    Extra forced slots are plain padding (idx=0, val=0)."""
     assert bm >= 1 and align >= 1
     row = np.asarray(row, np.int64)
     nnz = len(row)
@@ -115,16 +122,18 @@ def ell_blocks_plan(row: np.ndarray, col: np.ndarray, n_rows: int, *,
     pos = np.arange(nnz, dtype=np.int64) - starts[row[order]]
 
     n_blocks = max(-(-n_rows // bm), 1)
-    widths, offsets = [], []
-    off = 0
-    for b in range(n_blocks):
-        w = int(counts[b * bm:(b + 1) * bm].max(initial=0))
-        w = max(-(-w // align) * align, align)
-        offsets.append(off)
-        widths.append(w)
-        off += bm * w
-    widths_arr = np.asarray(widths, np.int64)
-    offsets_arr = np.asarray(offsets, np.int64)
+    # per-block width: max row degree in the block, align-rounded (>= align)
+    cpad = np.zeros(n_blocks * bm, np.int64)
+    lim = min(len(counts), n_blocks * bm)
+    cpad[:lim] = counts[:lim]
+    w = cpad.reshape(n_blocks, bm).max(axis=1)
+    w = np.maximum(-(-w // align) * align, align)
+    if min_widths is not None:
+        assert len(min_widths) == n_blocks, (len(min_widths), n_blocks)
+        w = np.maximum(w, np.asarray(min_widths, np.int64))
+    widths_arr = w
+    offsets_arr = np.concatenate([[0], np.cumsum(bm * w)[:-1]])
+    off = int(np.sum(bm * w))
 
     r = row[order]
     blk = r // bm
@@ -132,7 +141,8 @@ def ell_blocks_plan(row: np.ndarray, col: np.ndarray, n_rows: int, *,
     idx = np.zeros(off, np.int32)
     idx[flat] = np.asarray(col, np.int64)[order].astype(np.int32)
     return EllPlanSide(idx=idx, order=order, flat=flat, size=off,
-                       offsets=tuple(offsets), widths=tuple(widths),
+                       offsets=tuple(int(o) for o in offsets_arr),
+                       widths=tuple(int(x) for x in widths_arr),
                        bm=bm, n_rows=n_rows, n_rows_pad=n_blocks * bm)
 
 
@@ -207,28 +217,58 @@ def ell_pack(row: np.ndarray, col: np.ndarray, val: np.ndarray,
 
 
 def spmv_blocks(vec, idx, val, *, offsets, widths, bm, n_rows_pad):
-    """Blocked-ELL SpMV as pure jnp ops: per block, gather `vec` at the
-    stored indices, scale, and row-sum.  Shared verbatim by the Pallas
-    kernel body and the `ref` oracle so the two can only differ through
-    Pallas lowering itself (the parity tests pin that)."""
+    """Blocked-ELL SpMV as pure jnp ops: per run of equal-width blocks,
+    gather `vec` at the stored indices, scale, and row-sum.  Shared
+    verbatim by the Pallas kernel body and the `ref` oracle so the two
+    can only differ through Pallas lowering itself (the parity tests pin
+    that).
+
+    Consecutive blocks with the same width are contiguous in storage, so
+    one slice+reshape covers the whole run — the emitted program scales
+    with the number of width *runs*, not blocks (large-topology LPs have
+    thousands of blocks but only a few hundred runs, and a per-block
+    loop would blow up trace/compile time).  Per-row gather order and
+    the width-`w` row reduction are unchanged, so the result is
+    bit-identical to the per-block form."""
     outs = []
-    for off, w in zip(offsets, widths):
-        ib = jax.lax.slice_in_dim(idx, off, off + bm * w).reshape(bm, w)
-        vb = jax.lax.slice_in_dim(val, off, off + bm * w).reshape(bm, w)
+    nb = len(widths)
+    i = 0
+    while i < nb:
+        j = i + 1
+        while j < nb and widths[j] == widths[i]:
+            j += 1
+        w = widths[i]
+        rows = (j - i) * bm
+        off = offsets[i]
+        ib = jax.lax.slice_in_dim(idx, off, off + rows * w).reshape(rows, w)
+        vb = jax.lax.slice_in_dim(val, off, off + rows * w).reshape(rows, w)
         outs.append((jnp.take(vec, ib, axis=0) * vb).sum(axis=1))
+        i = j
     return jnp.concatenate(outs) if len(outs) > 1 else outs[0]
+
+
+PRECISIONS = ("fp32", "bf16")
 
 
 def pdhg_update_burst(x0, y0, c, tau, xmax, q, sig, ub, keep_n, keep_m,
                       row_idx, row_val, col_idx, col_val, *,
-                      row_meta: tuple, col_meta: tuple, iters: int):
+                      row_meta: tuple, col_meta: tuple, iters: int,
+                      precision: str = "fp32"):
     """`iters` iterations of the exact `core.solver._pdhg_ops` update
     over the blocked-ELL operator, plus the terminal per-row residual
     vector (|K_eq x - b| on equality rows, max(K_ub x - h, 0) on
     inequality rows).  Pure traced jnp — THE shared body: the Pallas
     kernel and the `ref.pdhg_ell_burst_ref` oracle both call this
     verbatim, so they can only differ through Pallas lowering itself.
-    Returns (x, y, worst)."""
+    Returns (x, y, worst).
+
+    `precision="bf16"` stores the iterates in bfloat16 between
+    iterations while every update — SpMV, prox/clip, dual ascent — and
+    the terminal residual are computed in float32 (iterates are cast up
+    at the top of each step and rounded back when stored).  The fp32
+    path is byte-for-byte the historical trace: no casts are inserted,
+    so `precision="fp32"` cannot perturb existing results."""
+    assert precision in PRECISIONS, precision
     ro, rw, rbm, rp = row_meta
     co, cw, cbm, cp = col_meta
 
@@ -240,8 +280,7 @@ def pdhg_update_burst(x0, y0, c, tau, xmax, q, sig, ub, keep_n, keep_m,
         return spmv_blocks(y, col_idx, col_val, offsets=co, widths=cw,
                            bm=cbm, n_rows_pad=cp)
 
-    def body(_, state):
-        x, y = state
+    def update(x, y):
         x_new = jnp.clip(x - tau * (c + KTy(y)), 0.0, xmax)
         x_new = jnp.where(keep_n, x, x_new)
         x_bar = 2.0 * x_new - x
@@ -250,7 +289,22 @@ def pdhg_update_burst(x0, y0, c, tau, xmax, q, sig, ub, keep_n, keep_m,
         y_new = jnp.where(keep_m, y, y_new)
         return x_new, y_new
 
-    x, y = jax.lax.fori_loop(0, iters, body, (x0, y0))
+    if precision == "bf16":
+        def body(_, state):
+            x, y = state
+            x_new, y_new = update(x.astype(jnp.float32),
+                                  y.astype(jnp.float32))
+            return x_new.astype(jnp.bfloat16), y_new.astype(jnp.bfloat16)
+
+        x, y = jax.lax.fori_loop(
+            0, iters, body, (x0.astype(jnp.bfloat16),
+                             y0.astype(jnp.bfloat16)))
+        x, y = x.astype(jnp.float32), y.astype(jnp.float32)
+    else:
+        def body(_, state):
+            return update(*state)
+
+        x, y = jax.lax.fori_loop(0, iters, body, (x0, y0))
     r = Kx(x) - q
     return x, y, jnp.where(ub, jnp.maximum(r, 0.0), jnp.abs(r))
 
@@ -259,7 +313,8 @@ def _burst_kernel(c_ref, tau_ref, xmax_ref, q_ref, sig_ref, ub_ref,
                   keep_n_ref, keep_m_ref, rid_ref, rval_ref, cid_ref,
                   cval_ref, x0_ref, y0_ref,
                   xo_ref, yo_ref, worst_ref, *,
-                  row_meta: tuple, col_meta: tuple, iters: int):
+                  row_meta: tuple, col_meta: tuple, iters: int,
+                  precision: str):
     """One fused PDHG burst, everything VMEM-resident: read the refs,
     run the shared update body, write the final iterates and residual
     vector — the caller segment-maxes it per instance, so convergence
@@ -268,7 +323,8 @@ def _burst_kernel(c_ref, tau_ref, xmax_ref, q_ref, sig_ref, ub_ref,
         x0_ref[...], y0_ref[...], c_ref[...], tau_ref[...], xmax_ref[...],
         q_ref[...], sig_ref[...], ub_ref[...], keep_n_ref[...],
         keep_m_ref[...], rid_ref[...], rval_ref[...], cid_ref[...],
-        cval_ref[...], row_meta=row_meta, col_meta=col_meta, iters=iters)
+        cval_ref[...], row_meta=row_meta, col_meta=col_meta, iters=iters,
+        precision=precision)
     xo_ref[...] = x
     yo_ref[...] = y
     worst_ref[...] = worst
@@ -277,18 +333,21 @@ def _burst_kernel(c_ref, tau_ref, xmax_ref, q_ref, sig_ref, ub_ref,
 def pdhg_burst(c, tau, xmax, q, sig, ub, keep_n, keep_m,
                row_idx, row_val, col_idx, col_val, x0, y0, *,
                row_meta: tuple, col_meta: tuple, iters: int,
-               interpret: bool = True):
+               interpret: bool = True, precision: str = "fp32"):
     """Run one fused PDHG burst; returns (x, y, worst).
 
     All vectors are storage-padded: x-side arrays have length n_pad,
     y-side length m_pad (see ell_pack; padded slots carry xmax=0 / q=0
     and stay fixed at zero).  `keep_n`/`keep_m` are per-coordinate
     freeze masks (True = hold), identical in meaning to the adaptive
-    batch kernel in core.solver."""
+    batch kernel in core.solver.  `precision` selects the iterate
+    storage dtype inside the burst (see pdhg_update_burst); inputs and
+    outputs are float32 either way."""
     n_pad, m_pad = x0.shape[0], y0.shape[0]
     f32 = jnp.float32
     kernel = functools.partial(_burst_kernel, row_meta=row_meta,
-                               col_meta=col_meta, iters=iters)
+                               col_meta=col_meta, iters=iters,
+                               precision=precision)
     return pl.pallas_call(
         kernel,
         out_shape=(jax.ShapeDtypeStruct((n_pad,), f32),
@@ -297,3 +356,157 @@ def pdhg_burst(c, tau, xmax, q, sig, ub, keep_n, keep_m,
         interpret=interpret,
     )(c, tau, xmax, q, sig, ub, keep_n, keep_m,
       row_idx, row_val, col_idx, col_val, x0, y0)
+
+
+# ---------------------------------------------------------------------------
+# Sharded operator: row-block partition of [eq; ub] across a device mesh
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShardedEllOperator:
+    """K (m x n) packed for an S-way row-block partition.
+
+    Shard s owns the contiguous global rows [s*m_loc, (s+1)*m_loc) (the
+    tail shard is padding-only past `m`).  Per shard there are two
+    blocked-ELL directions, exactly as in EllOperator but local:
+
+      * `row_*`: one stored row per LOCAL constraint row, gathering the
+        replicated x — shard s computes its own slice of K.x;
+      * `col_*`: one stored row per variable, gathering the LOCAL y —
+        shard s computes its partial of K^T.y, and the full product is
+        the psum over shards (each nnz lives in exactly one shard).
+
+    Every shard's pack uses THE SAME static meta (per-block widths are
+    the elementwise max across shards, see ell_blocks_plan min_widths),
+    so `shard_map` traces a single program; the per-shard tables are
+    concatenated shard-major into flat arrays whose leading extent
+    divides evenly by S — ready for a PartitionSpec("shard") split."""
+
+    row_idx: np.ndarray        # (S * row_size,) int32, global x indices
+    row_val: np.ndarray        # (S * row_size,) float32
+    col_idx: np.ndarray        # (S * col_size,) int32, LOCAL y indices
+    col_val: np.ndarray        # (S * col_size,) float32
+    row_meta: tuple            # unified per-shard (offsets, widths, bm, m_loc)
+    col_meta: tuple            # unified per-shard (offsets, widths, bm, n_pad)
+    shards: int
+    m: int
+    n: int
+    m_loc: int                 # padded rows owned by each shard
+
+    @property
+    def m_pad(self) -> int:
+        """Total padded row slots across all shards."""
+        return self.shards * self.m_loc
+
+    @property
+    def n_pad(self) -> int:
+        """Padded variable count (the col-direction row padding)."""
+        return self.col_meta[3]
+
+
+def ell_pack_sharded(row: np.ndarray, col: np.ndarray, val: np.ndarray,
+                     m: int, n: int, shards: int, *, bm: int = 8,
+                     align: int = 8) -> ShardedEllOperator:
+    """Pack a COO operator for an S-way row-block partition.
+
+    Two passes: the first lays each shard out independently to learn its
+    natural per-block widths; the second re-packs every shard with the
+    elementwise-max widths so all shards share one static meta (required
+    for a single shard_map trace).  Row order inside each shard is the
+    global order restricted to its rows, so gather row-sums match the
+    unsharded pack bit-for-bit per row."""
+    assert shards >= 1
+    row = np.asarray(row, np.int64)
+    col = np.asarray(col, np.int64)
+    val = np.asarray(val)
+    m_loc = max(-(-m // (shards * bm)), 1) * bm
+    parts = []
+    for s in range(shards):
+        sel = (row >= s * m_loc) & (row < (s + 1) * m_loc)
+        parts.append((row[sel] - s * m_loc, col[sel], val[sel]))
+    row_plans = [ell_blocks_plan(r, c, m_loc, bm=bm, align=align)
+                 for r, c, _ in parts]
+    col_plans = [ell_blocks_plan(c, r, n, bm=bm, align=align)
+                 for r, c, _ in parts]
+    rw = np.maximum.reduce([np.asarray(p.widths) for p in row_plans])
+    cw = np.maximum.reduce([np.asarray(p.widths) for p in col_plans])
+    row_packs, col_packs = [], []
+    for r, c, v in parts:
+        row_packs.append(ell_refill(
+            ell_blocks_plan(r, c, m_loc, bm=bm, align=align, min_widths=rw),
+            v))
+        col_packs.append(ell_refill(
+            ell_blocks_plan(c, r, n, bm=bm, align=align, min_widths=cw),
+            v))
+    return ShardedEllOperator(
+        row_idx=np.concatenate([p.idx for p in row_packs]),
+        row_val=np.concatenate([p.val for p in row_packs]),
+        col_idx=np.concatenate([p.idx for p in col_packs]),
+        col_val=np.concatenate([p.val for p in col_packs]),
+        row_meta=row_packs[0].meta, col_meta=col_packs[0].meta,
+        shards=shards, m=m, n=n, m_loc=m_loc)
+
+
+def pdhg_update_burst_sharded(x0, y0, c, tau, xmax, q, sig, ub, keep_n,
+                              keep_m, row_idx, row_val, col_idx, col_val, *,
+                              row_meta: tuple, col_meta: tuple, iters: int,
+                              axis: str, precision: str = "fp32"):
+    """Per-device body of the sharded PDHG burst (run inside shard_map).
+
+    Same update as pdhg_update_burst — it IS the trajectory contract of
+    core.solver._pdhg_ops over the blocked-ELL SpMV (spmv_blocks) — with
+    the two mat-vecs split by the row partition:
+
+      * K.x: each device computes its local constraint rows from the
+        replicated x (no communication);
+      * K^T.y: each device gathers its local dual slice into a full
+        length-n partial and the true product is `psum` over `axis` —
+        the single collective per iteration.
+
+    x-side arrays (x0, c, tau, xmax, keep_n) are replicated; y-side
+    arrays (y0, q, sig, ub, keep_m) are the local row slice.  Returns
+    (x, y_local, worst_local); x is identical on every device because it
+    is a deterministic function of replicated inputs and psum outputs.
+    `precision="bf16"` stores both iterates in bfloat16 between
+    iterations with all arithmetic (and the psum) in float32, exactly
+    like the single-device body."""
+    assert precision in PRECISIONS, precision
+    ro, rw, rbm, rp = row_meta
+    co, cw, cbm, cp = col_meta
+
+    def Kx(x):
+        return spmv_blocks(x, row_idx, row_val, offsets=ro, widths=rw,
+                           bm=rbm, n_rows_pad=rp)
+
+    def KTy(y):
+        part = spmv_blocks(y, col_idx, col_val, offsets=co, widths=cw,
+                           bm=cbm, n_rows_pad=cp)
+        return jax.lax.psum(part, axis)
+
+    def update(x, y):
+        x_new = jnp.clip(x - tau * (c + KTy(y)), 0.0, xmax)
+        x_new = jnp.where(keep_n, x, x_new)
+        x_bar = 2.0 * x_new - x
+        y_new = y + sig * (Kx(x_bar) - q)
+        y_new = jnp.where(ub, jnp.maximum(y_new, 0.0), y_new)
+        y_new = jnp.where(keep_m, y, y_new)
+        return x_new, y_new
+
+    if precision == "bf16":
+        def body(_, state):
+            x, y = state
+            x_new, y_new = update(x.astype(jnp.float32),
+                                  y.astype(jnp.float32))
+            return x_new.astype(jnp.bfloat16), y_new.astype(jnp.bfloat16)
+
+        x, y = jax.lax.fori_loop(
+            0, iters, body, (x0.astype(jnp.bfloat16),
+                             y0.astype(jnp.bfloat16)))
+        x, y = x.astype(jnp.float32), y.astype(jnp.float32)
+    else:
+        def body(_, state):
+            return update(*state)
+
+        x, y = jax.lax.fori_loop(0, iters, body, (x0, y0))
+    r = Kx(x) - q
+    return x, y, jnp.where(ub, jnp.maximum(r, 0.0), jnp.abs(r))

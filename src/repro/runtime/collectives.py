@@ -26,12 +26,13 @@ try:                                    # jax >= 0.6 top-level export
 except AttributeError:                  # jax 0.4.x
     from jax.experimental.shard_map import shard_map as _shard_map
 
+# The version-portable shard_map: every in-tree consumer (the sharded
+# PDHG driver in kernels.ops, make_scheduled_grad_sync below) goes
+# through this name so the jax.shard_map vs jax.experimental.shard_map
+# split is resolved in exactly one place.
+shard_map = _shard_map
+
 PyTree = Any
-
-
-def flatten_grads(grads: PyTree) -> tuple[list, Any]:
-    leaves, tdef = jax.tree.flatten(grads)
-    return leaves, tdef
 
 
 def bucketize(leaves: Sequence[jax.Array], bucket_bytes: float):
@@ -88,9 +89,9 @@ def scheduled_psum(leaves: list, bucket_ids: list[list[int]],
 
 
 def _tie(x, token):
-    """Make x depend on token without changing its value."""
-    z = jnp.zeros((), token.dtype).astype(x.dtype) * jnp.zeros((), x.dtype)
-    # cheap: add 0 * (reduce of token's first element)
+    """Make x depend on token without changing its value: add
+    0 * (token's first element), which XLA cannot elide across the
+    optimization barrier."""
     t0 = jnp.reshape(token, (-1,))[0].astype(x.dtype)
     return x + jnp.zeros_like(x) * t0
 
@@ -113,8 +114,8 @@ def make_scheduled_grad_sync(mesh: Mesh, plan: SlotPlan,
             return tuple(r / n_dp for r in reduced)
 
         specs = tuple(P(*([None] * l.ndim)) for l in leaves)
-        fn = _shard_map(inner, mesh=mesh, in_specs=specs,
-                        out_specs=specs)
+        fn = shard_map(inner, mesh=mesh, in_specs=specs,
+                       out_specs=specs)
         return jax.tree.unflatten(tdef, list(fn(*leaves)))
 
     return sync

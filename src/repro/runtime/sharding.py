@@ -266,6 +266,25 @@ class Strategy:
                 l, NamedSharding(self.mesh, self.compute_spec(p, l))), params)
 
 
+def solver_mesh(n_shards: int, *, axis: str = "shard") -> Mesh:
+    """1-D device mesh for the row-sharded PDHG path (core.solver
+    shards=N): the first `n_shards` local devices on a single named
+    axis.  On CPU test rigs the devices come from
+    XLA_FLAGS=--xla_force_host_platform_device_count=N (set before jax
+    is imported — see tests/test_scale.py); on real hardware they are
+    the accelerators jax enumerates."""
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    devices = jax.devices()
+    if n_shards > len(devices):
+        raise ValueError(
+            f"solver_mesh({n_shards}) needs {n_shards} devices but jax "
+            f"sees {len(devices)}; on CPU, relaunch with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{n_shards} (must be set before importing jax)")
+    return Mesh(np.array(devices[:n_shards]), (axis,))
+
+
 def install_sharder(strategy: Strategy | None) -> None:
     """Hook models.common.shard to emit with_sharding_constraint."""
     if strategy is None:

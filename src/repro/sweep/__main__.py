@@ -132,6 +132,16 @@ def main(argv=None) -> int:
                     help="PDHG lowering: xla (COO scatters, default) or "
                          "pallas (fused blocked-ELL kernel bursts; "
                          "interpret mode on CPU)")
+    ap.add_argument("--mesh", type=int, default=1,
+                    help="row-partition every PDHG dispatch across this "
+                         "many devices (pallas only; on CPU requires "
+                         "XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=N — see docs/SOLVER.md §9)")
+    ap.add_argument("--precision", default="fp32",
+                    choices=solver.PRECISIONS,
+                    help="PDHG iterate storage: fp32 (default) or bf16 "
+                         "(pallas only; arithmetic and residuals stay "
+                         "fp32 — see docs/SOLVER.md §9)")
     ap.add_argument("--oracle-check", type=int, default=2,
                     help="instances to spot-check against the exact MILP "
                          "(cheapest first; 0 disables)")
@@ -195,6 +205,7 @@ def main(argv=None) -> int:
         total_gbits=args.total_gbits, n_map=args.n_map,
         n_reduce=args.n_reduce, n_slots=args.slots or None,
         iters=args.iters, backend=args.backend,
+        mesh=args.mesh, precision=args.precision,
         oracle_check=args.oracle_check,
         oracle_time_limit=args.oracle_time_limit,
         profile=args.profile)

@@ -75,6 +75,13 @@ class SweepSpec:
     # blocked-ELL bursts, repro.kernels.pdhg_spmv); metrics agree to
     # ~1e-4 relative — see docs/SOLVER.md "Backends"
     backend: str = "xla"
+    # scale knobs (docs/SOLVER.md §9), both pallas-only: mesh > 1 row-
+    # partitions every PDHG dispatch across that many devices;
+    # precision="bf16" stores iterates in bfloat16 between iterations.
+    # Applied to the LP fast path (healthy + failure cells); baseline
+    # policies and rolling-horizon arrival runs stay single-device fp32.
+    mesh: int = 1
+    precision: str = "fp32"
     path_slack: int | None = 2        # near-shortest route pruning; None = off
     oracle_check: int = 0             # instances to spot-check vs the MILP
     oracle_time_limit: float = 60.0
@@ -104,6 +111,8 @@ class SweepSpec:
         if self.backend not in solver.BACKENDS:
             raise ValueError(f"unknown solver backend {self.backend!r}; "
                              f"have {solver.BACKENDS}")
+        # mesh/precision constraints (pallas-only) mirror the solver's
+        solver._check_scale_opts(self.backend, self.mesh, self.precision)
         for fl in self.failures:
             if fl not in failures.SCENARIOS or fl == "none":
                 # "none" is rejected too: its records would carry
@@ -206,7 +215,9 @@ def _retry_unfinished(probs, results, internal_obj: str, spec: SweepSpec):
                 p, 2 * p.n_slots,
                 path_slack=p.path_slack if tries == 0 else None)
             r = solver.solve_fast(p, internal_obj, iters=spec.iters,
-                                  tol=spec.tol, backend=spec.backend)
+                                  tol=spec.tol, backend=spec.backend,
+                                  shards=spec.mesh,
+                                  precision=spec.precision)
             tries += 1
         probs[i], results[i] = p, r
 
@@ -215,7 +226,9 @@ def _solve_group(probs, internal_obj: str, spec: SweepSpec):
     """Batched healthy solve + retry ladder; returns amortized wall time."""
     t0 = time.perf_counter()
     results = solver.solve_fast_batch(probs, internal_obj, iters=spec.iters,
-                                      tol=spec.tol, backend=spec.backend)
+                                      tol=spec.tol, backend=spec.backend,
+                                      shards=spec.mesh,
+                                      precision=spec.precision)
     _retry_unfinished(probs, results, internal_obj, spec)
     return results, (time.perf_counter() - t0) / max(len(probs), 1)
 
@@ -231,7 +244,9 @@ def _solve_failure_group(healthy_probs, healthy_results, fail_name: str,
     results = solver.solve_fast_ensemble(probs, internal_obj,
                                          warm=healthy_results,
                                          iters=spec.iters, tol=spec.tol,
-                                         backend=spec.backend)
+                                         backend=spec.backend,
+                                         shards=spec.mesh,
+                                         precision=spec.precision)
     _retry_unfinished(probs, results, internal_obj, spec)
     return probs, results, (time.perf_counter() - t0) / max(len(probs), 1)
 

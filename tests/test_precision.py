@@ -1,0 +1,111 @@
+"""bf16 iterate storage (solve precision="bf16") vs the fp32 paths.
+
+The mixed-precision PDHG stores iterates in bfloat16 between iterations
+but runs all arithmetic, the dual residuals, and the objective in fp32
+(kernels.pdhg_spmv.pdhg_update_burst).  The LP solution gets sloppier —
+bf16's ~3 significant digits floor the reachable primal residual — but
+the fast path re-scores the PACKED schedule with the exact paper model,
+and packing (path_decompose conserves flow exactly, temporal_pack
+enforces caps) absorbs LP-level noise.  These tests pin that contract:
+feasibility certificates hold at the standard fp32 tolerances, and the
+reported paper metrics stay within 1e-3 relative of the fp32 solve.
+"""
+import numpy as np
+import pytest
+
+from repro.core import solver, timeslot, topology, traffic, verify
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def _problem(topo_name: str, seed: int = 0, n_map: int = 4,
+             n_reduce: int = 3):
+    topo = topology.build(topo_name)
+    pat = traffic.pattern("uniform", n_map=n_map, n_reduce=n_reduce)
+    cf = traffic.generate(topo, pat, seed=seed)
+    return timeslot.ScheduleProblem(
+        topo, cf, n_slots=timeslot.suggest_n_slots(topo, cf))
+
+
+@pytest.mark.parametrize("topo_name", ["spine-leaf", "pon3"])
+def test_bf16_certifies_at_fp32_tolerance(topo_name):
+    p = _problem(topo_name)
+    r = solver.solve_fast(p, "energy", iters=1500, backend="pallas",
+                          precision="bf16")
+    # check_schedule's default tolerances are the fp32 ones — no loosening
+    cert = verify.check_schedule(p, r.schedule)
+    assert cert.ok, cert
+    assert r.metrics.feasible
+    assert r.metrics.max_violation == 0.0
+
+
+@pytest.mark.parametrize("topo_name", ["spine-leaf", "pon3"])
+def test_bf16_metrics_within_1e3_of_fp32(topo_name):
+    p = _problem(topo_name)
+    f32 = solver.solve_fast(p, "energy", iters=1500, backend="pallas")
+    b16 = solver.solve_fast(p, "energy", iters=1500, backend="pallas",
+                            precision="bf16")
+    assert b16.metrics.energy_j == pytest.approx(
+        f32.metrics.energy_j, rel=1e-3)
+    assert b16.metrics.completion_s == pytest.approx(
+        f32.metrics.completion_s, rel=1e-3)
+    np.testing.assert_allclose(b16.metrics.served, f32.metrics.served,
+                               rtol=1e-3)
+
+
+@pytest.mark.parametrize("topo_name", ["spine-leaf", "pon3"])
+def test_bf16_time_objective_certifies_with_bounded_completion(topo_name):
+    # The time objective's completion quantizes by slot index, so bf16
+    # can settle on a different — equally feasible — slot frontier.  We
+    # do not demand a 1e-3 metric match here, only that the schedule
+    # certifies and completion stays within 25% of fp32 (both solves are
+    # fully deterministic, so the bound is exact, not statistical).
+    p = _problem(topo_name)
+    f32 = solver.solve_fast(p, "time", iters=1500, backend="pallas")
+    b16 = solver.solve_fast(p, "time", iters=1500, backend="pallas",
+                            precision="bf16")
+    assert verify.check_schedule(p, b16.schedule).ok
+    assert b16.metrics.feasible
+    assert b16.metrics.completion_s <= f32.metrics.completion_s * 1.25
+
+
+def test_bf16_lp_iterates_stay_finite_and_boxed():
+    p = _problem("spine-leaf")
+    lp, _ = solver.build_routing_lp(p, "energy")
+    r = solver.solve_lp(lp, iters=400, backend="pallas", precision="bf16")
+    assert np.isfinite(r.x).all()
+    xmax = np.where(np.isfinite(lp.xmax), lp.xmax, np.inf)
+    # bf16 storage rounds within the box, never outside it by more than
+    # one ulp of the bound
+    assert (r.x >= -1e-6).all()
+    assert (r.x <= xmax * (1 + 2 ** -8) + 1e-6).all()
+
+
+def _feasibility_invariant(topo_name: str, seed: int) -> None:
+    p = _problem(topo_name, seed=seed)
+    f32 = solver.solve_fast(p, "energy", iters=1500, backend="pallas")
+    b16 = solver.solve_fast(p, "energy", iters=1500, backend="pallas",
+                            precision="bf16")
+    assert b16.metrics.feasible == f32.metrics.feasible
+    assert verify.check_schedule(p, b16.schedule).ok == \
+        verify.check_schedule(p, f32.schedule).ok
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=6, deadline=None)
+    @given(topo_name=st.sampled_from(["spine-leaf", "bcube"]),
+           seed=st.integers(min_value=0, max_value=7))
+    def test_precision_never_changes_feasibility(topo_name, seed):
+        _feasibility_invariant(topo_name, seed)
+else:
+    @pytest.mark.parametrize("topo_name,seed",
+                             [("spine-leaf", 1), ("spine-leaf", 3),
+                              ("bcube", 2)])
+    def test_precision_never_changes_feasibility(topo_name, seed):
+        # seeded stand-in for the hypothesis property (not installed here)
+        _feasibility_invariant(topo_name, seed)
