@@ -27,6 +27,7 @@ solve (core.solver.solve_fast_batch) stacks into fused dispatches.
 from __future__ import annotations
 
 import dataclasses
+import zlib
 
 import numpy as np
 
@@ -34,6 +35,33 @@ from .topology import Topology
 
 PLACEMENTS = ("spread", "packed", "local")
 SKEWS = ("uniform", "daytona")
+
+# Seeding schemes for `generate`/`generate_batch`:
+#   * "hierarchical" (default): np.random.default_rng([seed, TRAFFIC_TAG])
+#     — the same keyed SeedSequence convention core.arrivals uses
+#     (default_rng([seed, tag, k])), so the traffic stream for seed s can
+#     never collide with another module's stream for the same small
+#     integer seed.  The flat legacy scheme DID collide: generate(seed=s)
+#     and any other module calling default_rng(s) drew identical bits
+#     (core.arrivals itself re-enters generate with derived co-flow
+#     seeds, which under the flat scheme replayed sweep seeds 0..N-1
+#     whenever a derived seed landed in that range).
+#   * "legacy": flat np.random.default_rng(seed) — bit-compatible with
+#     the historical results; `shuffle_traffic` pins this scheme so its
+#     documented seed-stability guarantee keeps holding.
+TRAFFIC_TAG = zlib.crc32(b"repro.core.traffic")
+RNG_SCHEMES = ("hierarchical", "legacy")
+DEFAULT_RNG_SCHEME = "hierarchical"
+
+
+def _traffic_rng(seed: int, rng_scheme: str = DEFAULT_RNG_SCHEME
+                 ) -> np.random.Generator:
+    """The seeded generator for one traffic instance (see RNG_SCHEMES)."""
+    if rng_scheme == "legacy":
+        return np.random.default_rng(int(seed))
+    if rng_scheme != "hierarchical":
+        raise ValueError(f"rng_scheme {rng_scheme!r} not in {RNG_SCHEMES}")
+    return np.random.default_rng([int(seed), TRAFFIC_TAG])
 
 
 @dataclasses.dataclass(frozen=True)
@@ -78,6 +106,12 @@ class TrafficPattern:
             raise ValueError(f"placement {self.placement!r} not in {PLACEMENTS}")
         if self.skew not in SKEWS:
             raise ValueError(f"skew {self.skew!r} not in {SKEWS}")
+        if self.n_map < 1 or self.n_reduce < 1:
+            raise ValueError(f"need n_map >= 1 and n_reduce >= 1, got "
+                             f"n_map={self.n_map}, n_reduce={self.n_reduce}")
+        if not (np.isfinite(self.total_gbits) and self.total_gbits > 0):
+            raise ValueError(f"total_gbits must be finite and > 0, "
+                             f"got {self.total_gbits!r}")
 
 
 # Named presets used by the sweep CLI (`--patterns uniform,skew,packed,local`).
@@ -111,25 +145,95 @@ def server_groups(topo: Topology) -> dict[str, list[int]]:
     return groups
 
 
-def _place(topo: Topology, pat: TrafficPattern,
-           rng: np.random.Generator) -> tuple[np.ndarray, np.ndarray]:
-    """Pick (mappers, reducers) vertex ids under the pattern's placement."""
-    servers = np.asarray(topo.task_servers)
+@dataclasses.dataclass(frozen=True)
+class Placement:
+    """An explicit task placement: which task server hosts each task.
+
+    Split out of `generate` so placement becomes a first-class decision
+    variable — repro.search optimizes over Placements while the routing
+    LP prices each candidate.  One task per server (the paper's model):
+    ids must be distinct task servers, mappers and reducers disjoint.
+    """
+
+    mappers: np.ndarray    # (n_map,) vertex ids
+    reducers: np.ndarray   # (n_reduce,) vertex ids
+
+    def __post_init__(self):
+        object.__setattr__(self, "mappers",
+                           np.asarray(self.mappers, dtype=np.int64))
+        object.__setattr__(self, "reducers",
+                           np.asarray(self.reducers, dtype=np.int64))
+
+    @property
+    def n_map(self) -> int:
+        return int(self.mappers.shape[0])
+
+    @property
+    def n_reduce(self) -> int:
+        return int(self.reducers.shape[0])
+
+    def key(self) -> tuple:
+        """Hashable identity (for dedup / visited sets in the search)."""
+        return (tuple(self.mappers.tolist()), tuple(self.reducers.tolist()))
+
+    def validate(self, topo: Topology) -> "Placement":
+        """Check server ids and the one-task-per-server invariant."""
+        allowed = set(topo.task_servers)
+        for role, ids in (("mapper", self.mappers),
+                          ("reducer", self.reducers)):
+            bad = [int(s) for s in ids if int(s) not in allowed]
+            if bad:
+                raise ValueError(
+                    f"{topo.name}: {role} server id(s) {bad} are not task "
+                    f"servers (task servers: {sorted(allowed)})")
+        both = np.concatenate([self.mappers, self.reducers])
+        if len(set(both.tolist())) != both.size:
+            raise ValueError(
+                f"{topo.name}: placement assigns one server to several "
+                f"tasks (mappers={self.mappers.tolist()}, "
+                f"reducers={self.reducers.tolist()}); the model hosts "
+                f"one task per server")
+        return self
+
+
+def _check_capacity(topo: Topology, pat: TrafficPattern, n_servers: int):
+    """Over-subscription semantics: placement NEVER samples a server
+    twice (one task per server); a pattern that wants more tasks than
+    the topology has task servers is rejected loudly here, for every
+    placement kind, before any RNG draw."""
     need = pat.n_map + pat.n_reduce
-    if need > len(servers):
-        raise ValueError(f"{topo.name}: need {need} task servers, "
-                         f"have {len(servers)}")
+    if need > n_servers:
+        raise ValueError(
+            f"{topo.name}: placement {pat.placement!r} needs "
+            f"n_map + n_reduce = {pat.n_map} + {pat.n_reduce} = {need} "
+            f"task servers, have {n_servers}; shrink the pattern or "
+            f"use a larger topology")
+
+
+def sample_placement(topo: Topology, pat: TrafficPattern,
+                     rng: np.random.Generator) -> Placement:
+    """Draw a Placement under the pattern's placement policy.
+
+    When `n_map + n_reduce` does not divide evenly into racks, "packed"
+    leaves exactly one partial rack (whole racks fill in random order)
+    and "local" keeps every touched rack dual-role except at most the
+    last partial one — both are deliberate, tested semantics, not
+    accidents of the walk order.
+    """
+    servers = np.asarray(topo.task_servers)
+    _check_capacity(topo, pat, len(servers))
+    need = pat.n_map + pat.n_reduce
     if pat.placement == "spread":
         perm = rng.permutation(len(servers))
         chosen = servers[perm[:need]]
-        return chosen[:pat.n_map], chosen[pat.n_map:need]
+        return Placement(chosen[:pat.n_map], chosen[pat.n_map:need])
 
     groups = [np.asarray(g) for g in server_groups(topo).values()]
     order = rng.permutation(len(groups))
     if pat.placement == "packed":
         # fill whole racks in random order: mappers first, reducers continue
         seq = np.concatenate([groups[i] for i in order])
-        return seq[:pat.n_map], seq[pat.n_map:need]
+        return Placement(seq[:pat.n_map], seq[pat.n_map:need])
 
     # "local": walk racks in random order, splitting each rack's servers
     # between the two roles proportionally, so mappers and their reducers
@@ -150,7 +254,8 @@ def _place(topo: Topology, pat: TrafficPattern,
             else:
                 reducers.append(int(s))
                 rem_r -= 1
-    return np.asarray(mappers), np.asarray(reducers)
+    return Placement(np.asarray(mappers, dtype=np.int64),
+                     np.asarray(reducers, dtype=np.int64))
 
 
 def _map_outputs(pat: TrafficPattern, rng: np.random.Generator) -> np.ndarray:
@@ -160,24 +265,63 @@ def _map_outputs(pat: TrafficPattern, rng: np.random.Generator) -> np.ndarray:
     return np.full(pat.n_map, pat.total_gbits / pat.n_map)
 
 
-def generate(topo: Topology, pat: TrafficPattern, seed: int = 0) -> CoflowSet:
-    """Build one shuffle co-flow set for `topo` under `pat`."""
-    rng = np.random.default_rng(seed)
-    mappers, reducers = _place(topo, pat, rng)
-    map_out = _map_outputs(pat, rng)
-    src = np.repeat(mappers, pat.n_reduce)
-    dst = np.tile(reducers, pat.n_map)
+def generate_from_placement(topo: Topology, pat: TrafficPattern,
+                            placement: Placement, *,
+                            map_out: np.ndarray | None = None,
+                            rng: np.random.Generator | None = None,
+                            seed: int = 0,
+                            rng_scheme: str = DEFAULT_RNG_SCHEME
+                            ) -> CoflowSet:
+    """Build the shuffle co-flow set for an explicit Placement.
+
+    Map-output sizes come from `map_out` when given (the search loop
+    pins one size vector while it varies placements, so candidates are
+    comparable), else are drawn from `rng` (or a fresh seeded stream) by
+    the pattern's skew.  The placement is validated against the topology
+    and the pattern's task counts before any array is built."""
+    placement.validate(topo)
+    if placement.n_map != pat.n_map or placement.n_reduce != pat.n_reduce:
+        raise ValueError(
+            f"placement has {placement.n_map} mappers / "
+            f"{placement.n_reduce} reducers but the pattern wants "
+            f"{pat.n_map} / {pat.n_reduce}")
+    if map_out is None:
+        if rng is None:
+            rng = _traffic_rng(seed, rng_scheme)
+        map_out = _map_outputs(pat, rng)
+    else:
+        map_out = np.asarray(map_out, dtype=np.float64)
+        if map_out.shape != (pat.n_map,):
+            raise ValueError(f"map_out must have shape ({pat.n_map},), "
+                             f"got {map_out.shape}")
+    src = np.repeat(placement.mappers, pat.n_reduce)
+    dst = np.tile(placement.reducers, pat.n_map)
     size = np.repeat(map_out / pat.n_reduce, pat.n_reduce)
     return CoflowSet(src.astype(np.int64), dst.astype(np.int64),
                      size.astype(np.float64), topo.n_vertices)
 
 
-def generate_batch(topo: Topology, pat: TrafficPattern,
-                   seeds) -> list[CoflowSet]:
+def generate(topo: Topology, pat: TrafficPattern, seed: int = 0, *,
+             rng_scheme: str = DEFAULT_RNG_SCHEME) -> CoflowSet:
+    """Build one shuffle co-flow set for `topo` under `pat`.
+
+    Thin wrapper over sample_placement + generate_from_placement; the
+    draw order (placement permutation first, sizes second, one stream)
+    is bit-compatible with the historical monolithic implementation for
+    a given generator — rng_scheme="legacy" reproduces pre-hierarchical
+    results exactly (see RNG_SCHEMES)."""
+    rng = _traffic_rng(seed, rng_scheme)
+    placement = sample_placement(topo, pat, rng)
+    return generate_from_placement(topo, pat, placement, rng=rng)
+
+
+def generate_batch(topo: Topology, pat: TrafficPattern, seeds, *,
+                   rng_scheme: str = DEFAULT_RNG_SCHEME) -> list[CoflowSet]:
     """One CoflowSet per seed; all share F = n_map*n_reduce flows and the
     same topology, so the resulting ScheduleProblems stack into a batched
     solve (core.solver.solve_fast_batch)."""
-    return [generate(topo, pat, int(s)) for s in np.asarray(seeds)]
+    return [generate(topo, pat, int(s), rng_scheme=rng_scheme)
+            for s in np.asarray(seeds)]
 
 
 def shuffle_traffic(topo: Topology, total_gbits: float, *,
@@ -186,21 +330,51 @@ def shuffle_traffic(topo: Topology, total_gbits: float, *,
     """Legacy single-instance entry point (random-spread placement).
 
     Kept RNG-compatible with the original seed: placement permutation is
-    drawn first, skewed sizes second, so results for a given seed are
-    unchanged."""
+    drawn first, skewed sizes second, from the flat legacy stream, so
+    results for a given seed are unchanged — this entry point pins
+    rng_scheme="legacy" even though `generate` now defaults to the
+    hierarchical scheme."""
     pat = TrafficPattern(name="skew" if skew else "uniform",
                          placement="spread",
                          skew="daytona" if skew else "uniform",
                          n_map=n_map, n_reduce=n_reduce,
                          total_gbits=total_gbits)
-    return generate(topo, pat, seed)
+    return generate(topo, pat, seed, rng_scheme="legacy")
+
+
+def _validate_flows(src: np.ndarray, dst: np.ndarray, size: np.ndarray,
+                    n_vertices: int, what: str) -> None:
+    """Constructor-time flow validation: errors name the offending flow
+    index instead of surfacing later as LP infeasibility or verifier
+    residuals."""
+    if not (src.shape == dst.shape == size.shape) or src.ndim != 1:
+        raise ValueError(
+            f"{what}: src/dst/size must be equal-length 1-D arrays, got "
+            f"shapes {src.shape} / {dst.shape} / {size.shape}")
+    bad = np.flatnonzero((src < 0) | (src >= n_vertices)
+                         | (dst < 0) | (dst >= n_vertices))
+    if bad.size:
+        i = int(bad[0])
+        raise ValueError(
+            f"{what}: flow {i} endpoints ({int(src[i])} -> {int(dst[i])}) "
+            f"out of range for n_vertices={n_vertices}"
+            + (f" (and {bad.size - 1} more)" if bad.size > 1 else ""))
+    bad = np.flatnonzero(~np.isfinite(size) | (size < 0))
+    if bad.size:
+        i = int(bad[0])
+        raise ValueError(
+            f"{what}: flow {i} has size {size[i]!r}; sizes must be "
+            f"finite and >= 0 Gbits"
+            + (f" (and {bad.size - 1} more)" if bad.size > 1 else ""))
 
 
 def custom_coflow(src, dst, size, n_vertices: int) -> CoflowSet:
+    """Hand-built CoflowSet with constructor-time validation (endpoint
+    range, finite non-negative sizes, matching lengths)."""
     src = np.asarray(src, dtype=np.int64)
     dst = np.asarray(dst, dtype=np.int64)
     size = np.asarray(size, dtype=np.float64)
-    assert src.shape == dst.shape == size.shape
+    _validate_flows(src, dst, size, n_vertices, "custom_coflow")
     return CoflowSet(src, dst, size, n_vertices)
 
 
@@ -222,8 +396,13 @@ def concat_coflows(sets: list[CoflowSet], n_vertices: int) -> CoflowSet:
     whole arrival trace as one offline instance."""
     if not sets:
         return empty_coflow(n_vertices)
-    for s in sets:
-        assert s.n_vertices == n_vertices, (s.n_vertices, n_vertices)
+    for k, s in enumerate(sets):
+        if s.n_vertices != n_vertices:
+            raise ValueError(
+                f"concat_coflows: set {k} was built for "
+                f"n_vertices={s.n_vertices}, expected {n_vertices}")
+        _validate_flows(s.src, s.dst, s.size, n_vertices,
+                        f"concat_coflows[set {k}]")
     return CoflowSet(
         np.concatenate([s.src for s in sets]).astype(np.int64),
         np.concatenate([s.dst for s in sets]).astype(np.int64),

@@ -17,6 +17,7 @@ import argparse
 import pathlib
 import time
 
+from repro import search
 from repro.core import arrivals, failures, solver, topology, traffic
 from repro.core import policies as policy_zoo
 
@@ -109,6 +110,19 @@ def main(argv=None) -> int:
                          "named policy on every LP instance and record "
                          "the optimal-vs-practical gap; comma list or "
                          "'all'; bare --policy means 'all'")
+    ap.add_argument("--placement-search", nargs="?", const="all",
+                    default="",
+                    help="joint placement + routing axis (repro.search): "
+                         "per topology x objective x seed, optimize the "
+                         "task placement with the named methods and "
+                         "record optimized-vs-fixed gain rows; comma "
+                         f"list or 'all' ({', '.join(search.METHODS)}); "
+                         "bare --placement-search means 'all'")
+    ap.add_argument("--placement-budget", type=int, default=6,
+                    help="placement-search generations per run (each is "
+                         "one stacked batched evaluator dispatch)")
+    ap.add_argument("--placement-population", type=int, default=8,
+                    help="placement candidates per stacked dispatch")
     ap.add_argument("--arrivals", nargs="?", const="all", default="",
                     help="online-arrival families for rolling-horizon "
                          "re-solves (core.arrivals): comma list or 'all' "
@@ -199,6 +213,11 @@ def main(argv=None) -> int:
                   if args.arrivals else ()),
         policies=(_csv_list(args.policy, policy_zoo.POLICIES, "policy")
                   if args.policy else ()),
+        placement_search=(_csv_list(args.placement_search, search.METHODS,
+                                    "placement-search method")
+                          if args.placement_search else ()),
+        placement_generations=args.placement_budget,
+        placement_population=args.placement_population,
         arrival_coflows=args.arrival_coflows,
         arrival_mean_s=args.arrival_mean_s,
         epoch_s=args.epoch_s or None,

@@ -33,6 +33,7 @@ from typing import Callable
 
 import numpy as np
 
+from repro import search
 from repro.core import (arrivals, failures, oracle, solver, timeslot,
                         topology, traffic)
 from repro.core import policies as policy_zoo
@@ -55,6 +56,12 @@ class SweepSpec:
     # baseline policies (core.policies.POLICIES names) to run next to the
     # LP in every healthy and failure cell, recording gap_vs_lp rows
     policies: tuple[str, ...] = ()
+    # placement-search methods (repro.search.METHODS): per topology x
+    # objective x seed, jointly optimize task placement + routing and
+    # record optimized-vs-fixed-placement gain rows
+    placement_search: tuple[str, ...] = ()
+    placement_generations: int = 6    # move rounds per search run
+    placement_population: int = 8     # candidates per stacked dispatch
     # online-arrival families (core.arrivals.FAMILIES); per family each seed
     # draws one deterministic trace and runs the rolling-horizon driver
     # (warm-started epoch re-solves) instead of a one-shot solve
@@ -128,6 +135,16 @@ class SweepSpec:
             if pol not in policy_zoo.POLICIES:
                 raise ValueError(f"unknown policy {pol!r}; "
                                  f"have {sorted(policy_zoo.POLICIES)}")
+        for method in self.placement_search:
+            if method not in search.METHODS:
+                raise ValueError(f"unknown placement-search method "
+                                 f"{method!r}; have {search.METHODS}")
+        if self.placement_search:
+            # fail before solving anything, not inside the search loop
+            search.SearchConfig(
+                generations=self.placement_generations,
+                population=self.placement_population,
+                backend=self.backend).validate()
 
 
 @dataclasses.dataclass
@@ -167,6 +184,15 @@ class SweepRecord:
     # optimality ratio vs the cell's LP solve (core.policies.gap_vs_lp)
     policy: str = "lp"
     gap_vs_lp: float = 1.0
+    # placement-search rows (repro.search): "none" marks ordinary rows.
+    # A search run emits one optimized row (pattern="optimized") plus one
+    # row per fixed baseline placement (pattern="spread"/"packed"/
+    # "local"), all tagged with the method.  placement_gain is the best
+    # FIXED placement's primary metric over THIS row's — the optimized
+    # row reads > 1 exactly when the search strictly beat every fixed
+    # placement; the winning baseline row reads 1.0 by construction
+    placement_search: str = "none"
+    placement_gain: float = 1.0
 
     @property
     def primary(self) -> float:
@@ -325,6 +351,58 @@ def _policy_records(records, problems, spec: SweepSpec, say,
         say(f"{topo_name:10s} {pat_name:8s} min-{obj:10s} "
             f"@{pol_name + tag:14s} "
             f"gap={np.mean(gaps):6.3f}x  ({pol_s*1e3:.1f} ms/inst)")
+
+
+def _placement_records(records, problems, spec: SweepSpec, say,
+                       topo_name: str, topo, obj: str,
+                       method: str) -> None:
+    """One placement-search cell: per seed, jointly optimize placement +
+    routing (repro.search.optimize_placement, one stacked batched
+    dispatch per generation) and append the optimized row plus the three
+    fixed-placement baseline rows it was measured against.
+
+    The search runs once per topology x objective x seed — the sweep's
+    pattern axis IS the placement being optimized, so search cells hang
+    off the topology, not off any one pattern; skew/scale come from the
+    spec's shared knobs."""
+    pat = traffic.pattern("uniform", n_map=spec.n_map,
+                          n_reduce=spec.n_reduce,
+                          total_gbits=spec.total_gbits)
+    cfg = search.SearchConfig(
+        generations=spec.placement_generations,
+        population=spec.placement_population,
+        iters=spec.iters, tol=spec.tol, backend=spec.backend,
+        rho=spec.rho, path_slack=spec.path_slack,
+        n_slots=spec.n_slots)
+    if not spec.seeds:
+        return
+    gains, walls = [], []
+    for seed in spec.seeds:
+        t0 = time.perf_counter()
+        res = search.optimize_placement(
+            topo, pat, OBJECTIVES[obj], method=method,
+            cfg=dataclasses.replace(cfg, seed=int(seed)))
+        wall = time.perf_counter() - t0
+        base_score = res.baselines[res.baseline_best].score
+        for pat_label, cand, gain in (
+                [("optimized", res.best, res.gain)]
+                + [(kind, c, (base_score / c.score if c.score > 0
+                              and np.isfinite(c.score) else 0.0))
+                   for kind, c in res.baselines.items()]):
+            rec = _record(topo_name, obj, pat_label, seed, cand.problem,
+                          cand.result, wall,
+                          offered=cand.problem.coflow.total_gbits,
+                          backend=spec.backend)
+            rec.placement_search = method
+            rec.placement_gain = float(gain)
+            records.append(rec)
+            problems.append(cand.problem)
+        gains.append(res.gain)
+        walls.append(wall)
+    say(f"{topo_name:10s} searched min-{obj:10s} @{method:14s} "
+        f"gain={np.mean(gains):6.3f}x "
+        f"(best {np.max(gains):.3f}x, {np.mean(walls):.1f} s/seed, "
+        f"{res.evaluations} evals/{res.dispatches} dispatches each)")
 
 
 def _solve_arrival_cell(topo, pat, fam: str, internal_obj: str,
@@ -506,6 +584,12 @@ def run_sweep(spec: SweepSpec, *, log: Callable[[str], None] | None = None
                         _profile_line(
                             say, f"{topo_name}/{pat_name}/min-{obj}~{fam}",
                             snap, time.perf_counter() - t_cell)
+        # placement-search cells hang off topology x objective (the
+        # pattern axis is exactly what the search optimizes over)
+        for obj in spec.objectives:
+            for method in spec.placement_search:
+                _placement_records(records, problems, spec, say,
+                                   topo_name, topo, obj, method)
     if spec.oracle_check:
         _spot_check(records, problems, spec, say)
     return records, problems
@@ -520,7 +604,8 @@ def _spot_check(records, problems, spec: SweepSpec, say) -> None:
     # spot-check skips them too (their gap column is gap_vs_lp)
     order = sorted(
         (i for i in range(len(records))
-         if records[i].arrivals == "none" and records[i].policy == "lp"),
+         if records[i].arrivals == "none" and records[i].policy == "lp"
+         and records[i].placement_search == "none"),
         key=lambda i: (problems[i].coflow.n_flows
                        * problems[i].topo.n_edges
                        * problems[i].topo.n_wavelengths

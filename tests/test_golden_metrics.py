@@ -23,7 +23,7 @@ import pathlib
 import numpy as np
 import pytest
 
-from repro import service
+from repro import search, service
 from repro.core import (arrivals, policies, solver, timeslot, topology,
                         traffic, verify)
 
@@ -49,6 +49,14 @@ PATTERN = dict(n_map=4, n_reduce=3, total_gbits=8.0)
 # tenant sharing one scheduler (repro.service), seed 0 — service-loop
 # refactors cannot silently shift the schedules it emits
 SERVICE_KEY = "service/spine-leaf+pon3/seed0"
+
+# the pinned placement-search runs (repro.search): one small SA run per
+# GRID cell, seed 0 — search refactors (moves, cooling, seeding, the
+# batched evaluator) cannot silently shift the optimized placements or
+# their gains.  The budget is deliberately tiny; the committed
+# results/placement run uses the real budget.
+SEARCH_CFG = dict(method="sa", seed=0, generations=2, population=6,
+                  iters=1500)
 
 
 def _problem(topo_name: str) -> timeslot.ScheduleProblem:
@@ -120,6 +128,25 @@ def _service_run(backend: str) -> dict:
             "admitted": res.counters.admitted}
 
 
+def _search_run(topo_name: str, objective: str, backend: str) -> dict:
+    topo = topology.build(topo_name)
+    pat = traffic.pattern("uniform", **PATTERN)
+    obj = "time" if objective == "time" else "energy"
+    res = search.optimize_placement(topo, pat, obj, backend=backend,
+                                    **SEARCH_CFG)
+    res.best.result.certificate.assert_ok(
+        f"search/{topo_name}/min-{objective}[{backend}]")
+    return {"best_score": float(res.best.score),
+            "gain": float(res.gain),
+            "baseline_best": res.baseline_best,
+            "baselines": {k: float(c.score)
+                          for k, c in res.baselines.items()},
+            "best_mappers": res.best.placement.mappers.tolist(),
+            "best_reducers": res.best.placement.reducers.tolist(),
+            "evaluations": res.evaluations,
+            "dispatches": res.dispatches}
+
+
 def _golden() -> dict:
     with open(GOLDEN_PATH) as fh:
         return json.load(fh)
@@ -183,11 +210,42 @@ def test_golden_policy_gaps(topo_name, objective, pol_name, backend):
                     f"[{backend}] {key} drifted")
 
 
+@pytest.mark.parametrize("backend", solver.BACKENDS)
+@pytest.mark.parametrize("topo_name,objective", GRID)
+def test_golden_search_runs(topo_name, objective, backend):
+    """The pinned SA placement-search runs: optimized placement, score,
+    gain, and per-baseline scores must match the committed numbers on
+    both backends.  The accept/reject trajectory depends on exact score
+    comparisons, so the placement ids are pinned too — if the backends
+    ever diverge on a comparison, this catches it loudly rather than
+    letting search results drift quietly."""
+    want = _golden()[f"search/{topo_name}/min-{objective}/sa/seed{SEED}"]
+    got = _search_run(topo_name, objective, backend)
+    assert got["baseline_best"] == want["baseline_best"]
+    assert got["evaluations"] == want["evaluations"]
+    assert got["dispatches"] == want["dispatches"]
+    assert got["best_mappers"] == want["best_mappers"], \
+        f"search/{topo_name}/min-{objective}[{backend}] optimized " \
+        f"placement drifted (regen only if intentional)"
+    assert got["best_reducers"] == want["best_reducers"]
+    np.testing.assert_allclose(got["best_score"], want["best_score"],
+                               rtol=RTOL)
+    np.testing.assert_allclose(got["gain"], want["gain"], rtol=RTOL)
+    assert got["gain"] >= 1.0 - 1e-12
+    for k in search.BASELINES:
+        np.testing.assert_allclose(
+            got["baselines"][k], want["baselines"][k], rtol=RTOL,
+            err_msg=f"search/{topo_name}/min-{objective}[{backend}] "
+                    f"baseline {k} drifted")
+
+
 def _regen() -> None:
     doc = {f"{t}/min-{o}/seed{SEED}": _solve(t, o, "xla") for t, o in GRID}
     doc.update({f"policy/{t}/min-{o}/{pol}/seed{SEED}":
                 _policy_gap(t, o, pol, "xla")
                 for t, o, pol in POLICY_GRID})
+    doc.update({f"search/{t}/min-{o}/sa/seed{SEED}": _search_run(t, o, "xla")
+                for t, o in GRID})
     doc[SERVICE_KEY] = _service_run("xla")
     GOLDEN_PATH.parent.mkdir(parents=True, exist_ok=True)
     GOLDEN_PATH.write_text(json.dumps(doc, indent=1, sort_keys=True) + "\n")
@@ -196,6 +254,9 @@ def _regen() -> None:
         if k == SERVICE_KEY:
             print(f"  {k}: E={v['total_energy_j']:.4f} J "
                   f"M={v['makespan_s']:.6f} s done={v['n_done']}")
+        elif k.startswith("search/"):
+            print(f"  {k}: best={v['best_score']:.6f} "
+                  f"gain={v['gain']:.4f} vs {v['baseline_best']}")
         else:
             print(f"  {k}: E={v['energy_j']:.4f} J  "
                   f"M={v['completion_s']:.6f} s")

@@ -66,15 +66,37 @@ def test_local_placement_colocates_roles():
 
 
 def test_spread_matches_legacy_shuffle_traffic():
+    """shuffle_traffic pins the flat legacy stream; generate reproduces
+    it bit-for-bit under rng_scheme="legacy" (the compat flag)."""
     topo = topology.build("spine-leaf")
     for seed, skew in [(0, False), (1, False), (2, True)]:
         old = traffic.shuffle_traffic(topo, 8.0, n_map=4, n_reduce=3,
                                       skew=skew, seed=seed)
         pat = traffic.TrafficPattern(
             "x", "spread", "daytona" if skew else "uniform", 4, 3, 8.0)
-        new = traffic.generate(topo, pat, seed)
+        new = traffic.generate(topo, pat, seed, rng_scheme="legacy")
         assert (old.src == new.src).all() and (old.dst == new.dst).all()
         np.testing.assert_allclose(old.size, new.size)
+        # legacy bit-compat regression: flat default_rng(seed) draws
+        hist = np.random.default_rng(seed)
+        perm = hist.permutation(len(topo.task_servers))
+        want_src = np.asarray(topo.task_servers)[perm[:4]]
+        assert (np.unique(new.src) == np.sort(want_src)).all()
+
+
+def test_hierarchical_scheme_is_default_and_distinct():
+    """generate now seeds default_rng([seed, TRAFFIC_TAG]) (the
+    core.arrivals convention) — the flat scheme collided with any other
+    module seeding default_rng(seed) for the same small seed."""
+    topo = topology.build("spine-leaf")
+    pat = small_pattern("uniform")
+    default = traffic.generate(topo, pat, 0)
+    hier = traffic.generate(topo, pat, 0, rng_scheme="hierarchical")
+    legacy = traffic.generate(topo, pat, 0, rng_scheme="legacy")
+    assert (default.src == hier.src).all() and (default.dst == hier.dst).all()
+    assert (hier.src != legacy.src).any() or (hier.dst != legacy.dst).any()
+    with pytest.raises(ValueError, match="rng_scheme"):
+        traffic.generate(topo, pat, 0, rng_scheme="nope")
 
 
 def test_generate_batch_shapes_and_determinism():
@@ -99,6 +121,130 @@ def test_pattern_validation():
     with pytest.raises(ValueError):
         traffic.generate(topology.build("spine-leaf"),
                          traffic.pattern("uniform", n_map=20, n_reduce=20))
+
+
+# smallest buildable member of each of the six paper DCN families
+SMALLEST = {
+    "fat-tree": dict(k=2),
+    "spine-leaf": dict(n_servers=4, n_leaf=2, n_spine=1),
+    "bcube": dict(n=2),
+    "dcell": dict(n=2),
+    # 2 racks + OLT = 3 communicating vertices -> closed-form AWGR table
+    "pon3": dict(n_racks=2, servers_per_rack=2,
+                 lam=topology.awgr_lambda(3)),
+    "pon5": dict(n_racks=2, servers_per_rack=2),
+}
+
+
+@pytest.mark.parametrize("family,kw", sorted(SMALLEST.items()))
+@pytest.mark.parametrize("pat_name", sorted(traffic.PATTERNS))
+def test_oversubscription_raises_with_counts(family, kw, pat_name):
+    """One task per server: a pattern wanting more tasks than the
+    topology has task servers fails loudly, for every placement kind,
+    naming the counts — never a numpy slicing surprise."""
+    topo = topology.build(family, **kw)
+    n_srv = len(topo.task_servers)
+    assert n_srv >= 2
+    over = traffic.pattern(pat_name, n_map=n_srv, n_reduce=1,
+                           total_gbits=4.0)
+    with pytest.raises(ValueError) as e:
+        traffic.generate(topo, over, seed=0)
+    msg = str(e.value)
+    assert str(n_srv + 1) in msg and str(n_srv) in msg
+    assert topo.name in msg
+
+
+@pytest.mark.parametrize("family,kw", sorted(SMALLEST.items()))
+@pytest.mark.parametrize("pat_name", sorted(traffic.PATTERNS))
+def test_exact_fit_placement_on_smallest_topology(family, kw, pat_name):
+    """n_map + n_reduce == available servers works on the smallest
+    member of every family: each role's servers are distinct task
+    servers and together they exhaust the topology (so "packed" and
+    "local" also cover the uneven-division case: the last rack is
+    partial whenever the rack size does not divide the task count)."""
+    topo = topology.build(family, **kw)
+    n_srv = len(topo.task_servers)
+    n_map = max(1, n_srv - max(1, n_srv // 3))
+    pat = traffic.pattern(pat_name, n_map=n_map,
+                          n_reduce=n_srv - n_map, total_gbits=4.0)
+    for seed in range(2):
+        cf = traffic.generate(topo, pat, seed)
+        used = np.concatenate([np.unique(cf.src), np.unique(cf.dst)])
+        assert sorted(used.tolist()) == sorted(topo.task_servers)
+        assert not (set(cf.src.tolist()) & set(cf.dst.tolist()))
+
+
+def test_pattern_rejects_degenerate_scale():
+    for kw in (dict(n_map=0), dict(n_reduce=0), dict(n_map=-1),
+               dict(total_gbits=0.0), dict(total_gbits=float("nan"))):
+        with pytest.raises(ValueError):
+            traffic.pattern("uniform", **kw)
+
+
+def test_custom_coflow_validation_names_flow_index():
+    with pytest.raises(ValueError, match="flow 1"):
+        traffic.custom_coflow([0, 99], [1, 2], [1.0, 1.0], n_vertices=10)
+    with pytest.raises(ValueError, match="flow 0"):
+        traffic.custom_coflow([-1, 2], [1, 2], [1.0, 1.0], n_vertices=10)
+    with pytest.raises(ValueError, match="flow 2"):
+        traffic.custom_coflow([0, 1, 2], [3, 4, 5],
+                              [1.0, 2.0, -0.5], n_vertices=10)
+    with pytest.raises(ValueError, match="flow 0"):
+        traffic.custom_coflow([0], [1], [float("nan")], n_vertices=4)
+    with pytest.raises(ValueError, match="1-D"):
+        traffic.custom_coflow([0, 1], [1], [1.0], n_vertices=4)
+    # a valid one still builds
+    cf = traffic.custom_coflow([0, 1], [2, 3], [1.0, 2.0], n_vertices=4)
+    assert cf.n_flows == 2 and cf.total_gbits == pytest.approx(3.0)
+
+
+def test_concat_coflows_validation_names_set_index():
+    ok = traffic.custom_coflow([0], [1], [1.0], n_vertices=4)
+    other = traffic.custom_coflow([0], [1], [1.0], n_vertices=5)
+    with pytest.raises(ValueError, match="set 1"):
+        traffic.concat_coflows([ok, other], n_vertices=4)
+    # a stale/corrupt member is caught even when n_vertices matches
+    bad = traffic.CoflowSet(np.array([9]), np.array([1]),
+                            np.array([1.0]), 4)
+    with pytest.raises(ValueError, match=r"set 1.*flow 0"):
+        traffic.concat_coflows([ok, bad], n_vertices=4)
+    merged = traffic.concat_coflows([ok, ok], n_vertices=4)
+    assert merged.n_flows == 2
+
+
+def test_placement_value_round_trip():
+    """generate == sample_placement + generate_from_placement on the
+    same stream (the Placement split is RNG-transparent); explicit
+    map_out pins sizes while placements vary."""
+    topo = topology.build("pon3")
+    pat = small_pattern("uniform")
+    for scheme in traffic.RNG_SCHEMES:
+        rng = traffic._traffic_rng(3, scheme)
+        pl = traffic.sample_placement(topo, pat, rng)
+        cf = traffic.generate_from_placement(topo, pat, pl, rng=rng)
+        ref = traffic.generate(topo, pat, 3, rng_scheme=scheme)
+        assert (cf.src == ref.src).all() and (cf.dst == ref.dst).all()
+        np.testing.assert_allclose(cf.size, ref.size)
+    pl = traffic.sample_placement(topo, pat, traffic._traffic_rng(0))
+    fixed = np.array([4.0, 2.0, 1.0, 1.0])
+    cf = traffic.generate_from_placement(topo, pat, pl, map_out=fixed)
+    np.testing.assert_allclose(cf.size.reshape(4, 3).sum(axis=1), fixed)
+
+
+def test_placement_validate_rejects_bad_assignments():
+    topo = topology.build("pon3")
+    pat = small_pattern("uniform")
+    switch = [v for v in range(topo.n_vertices)
+              if v not in topo.task_servers][0]
+    with pytest.raises(ValueError, match="not task servers"):
+        traffic.Placement([switch, 1, 2, 3], [4, 5, 6]).validate(topo)
+    srv = topo.task_servers
+    with pytest.raises(ValueError, match="one task per server"):
+        traffic.Placement(srv[:4], srv[3:6]).validate(topo)
+    with pytest.raises(ValueError, match="mappers"):
+        traffic.generate_from_placement(
+            topo, pat, traffic.Placement(srv[:3], srv[3:6]),
+            map_out=np.ones(4))
 
 
 def test_suggest_n_slots_scales_with_volume():
