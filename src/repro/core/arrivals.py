@@ -44,7 +44,8 @@ import zlib
 
 import numpy as np
 
-from . import solver
+from . import chaos as chaosmod
+from . import failures, solver, verify
 from .timeslot import (TOL, ScheduleProblem, prefix_energy, rehorizon,
                        suggest_n_slots)
 from .topology import Topology
@@ -212,6 +213,16 @@ class EpochStats:
     max_violation: float
     lp_primal_residual: float
     solve_s: float            # wall time of the epoch solve(s)
+    # chaos-replay bookkeeping (all zero/default on a healthy run)
+    chaos_events: int = 0     # fail/repair events applied at this boundary
+    degraded: bool = False    # fabric was degraded while this epoch ran
+    stranded_gbits: float = 0.0   # carried volume whose planned paths died
+                                  # at this boundary (re-routed by the
+                                  # warm-start projection)
+    deferred_gbits: float = 0.0   # demand parked as deferred-by-failure
+                                  # (endpoints disconnected) this epoch
+    certified: bool = True    # core.verify certificate of the epoch
+                              # schedule (checked on chaos runs)
 
 
 @dataclasses.dataclass
@@ -244,6 +255,19 @@ class OnlineResult:
     # the final epoch's solver output — with a single epoch this carries
     # exactly the one-shot solve_fast result for the merged co-flow set
     last_result: solver.FastPathResult | None = None
+    # chaos-replay outcome (defaults on a healthy run; see docs/CHAOS.md)
+    availability: float = 1.0     # fraction of [0, makespan] with full
+                                  # admissible capacity (trace-exact)
+    stranded_gbits: float = 0.0   # total carried volume re-routed after
+                                  # its decomposed paths died
+    deferred_failure_gbits: float = 0.0   # demand still parked as
+                                  # deferred-by-failure when the run ended
+                                  # (endpoints never reconnected)
+    recoveries: list[float] = dataclasses.field(default_factory=list)
+                                  # time-to-recover per episode, seconds
+    chaos_log: list[str] = dataclasses.field(default_factory=list)
+                                  # canonical replay log lines (byte-
+                                  # stable per seed and backend)
 
     @property
     def n_epochs(self) -> int:
@@ -301,7 +325,9 @@ def run_online(topo: Topology, trace: list[Arrival],
                path_slack: int | None = 2, iters: int = 3000,
                tol: float | None = 2e-3, chunk: int = 250,
                backend: str = "xla", warm: bool = True,
-               max_epochs: int = 128) -> OnlineResult:
+               max_epochs: int = 128,
+               chaos: list[chaosmod.ChaosEvent] | None = None,
+               fallback_policy: str | None = None) -> OnlineResult:
     """Simulate rolling-horizon scheduling of an arrival trace.
 
     Every epoch re-plans *all* outstanding work (carried residuals +
@@ -312,6 +338,19 @@ def run_online(topo: Topology, trace: list[Arrival],
     completion.  With ``warm=True`` (default) each re-solve starts from
     the previous epoch's projected PDHG state (cold solve on the first
     epoch, after a topology-shape change, or if the projection fails).
+
+    `chaos` replays a core.chaos failure/repair event trace: events are
+    applied at epoch boundaries, carried flows whose decomposed paths
+    died are re-routed through the warm-start projection (their volume
+    reported as stranded), demand on fully-disconnected endpoints is
+    parked as *deferred-by-failure* (re-admitted once the fabric heals,
+    never silently shed), and every epoch schedule is certified via
+    core.verify.  `fallback_policy` names a core.policies baseline that
+    takes the epoch when the rehorizon retry ladder exhausts (accepted
+    only if it certifies feasible and drains the demand) — the service
+    loop's hardened ladder; None (default) keeps the historical
+    retry-only behavior, so healthy runs are byte-identical to earlier
+    releases.
 
     Returns an OnlineResult; per-epoch energies are exact paper-model
     numbers for the executed prefixes, and co-flow completion times use
@@ -330,18 +369,47 @@ def run_online(topo: Topology, trace: list[Arrival],
              for a in pending}
     unfinished = {a.coflow_id: int(a.coflow.n_flows) for a in pending}
 
+    fabric = chaosmod.FabricState(topo, chaos) if chaos else None
+    if fallback_policy is not None:
+        from . import policies as policy_zoo
+        fallback = policy_zoo.get(fallback_policy)
+    else:
+        fallback = None
+    chaos_log: list[str] = []
+    recoveries: list[float] = []
+    recover_open: float | None = None
+    stranded_total = 0.0
+
     # carried residual flows (flat arrays, one entry per unfinished flow)
     c_src = np.zeros(0, np.int64)
     c_dst = np.zeros(0, np.int64)
     c_res = np.zeros(0, np.float64)
     c_cid = np.zeros(0, np.int64)          # owning co-flow id
     c_prev = np.zeros(0, np.int64)         # index in the previous problem
+    # deferred-by-failure flows: endpoints disconnected by an active
+    # failure; they re-enter the candidate set at every boundary and go
+    # back to the pool while still unroutable (always empty chaos-off)
+    d_src = np.zeros(0, np.int64)
+    d_dst = np.zeros(0, np.int64)
+    d_res = np.zeros(0, np.float64)
+    d_cid = np.zeros(0, np.int64)
 
     epochs: list[EpochStats] = []
     prev: solver.FastPathResult | None = None
     t_now = 0.0
     total_energy = 0.0
-    while (pending or c_res.size) and len(epochs) < max_epochs:
+    while (pending or c_res.size or d_res.size) and len(epochs) < max_epochs:
+        cap_changed = False
+        epoch_stranded = 0.0
+        if fabric is not None:
+            applied, cap_changed = fabric.advance_to(t_now)
+            for ev in applied:
+                chaos_log.append(f"t={t_now:.6f} {ev.kind} "
+                                 f"event={ev.event_id} "
+                                 f"scenario={ev.scenario.name}")
+        etopo = fabric.topo if fabric is not None else topo
+        n_chaos = len(applied) if fabric is not None else 0
+
         admitted = []
         while pending and pending[0].t_arrive <= t_now + 1e-9:
             admitted.append(pending.pop(0))
@@ -350,23 +418,59 @@ def run_online(topo: Topology, trace: list[Arrival],
         new_size = [a.coflow.size for a in admitted]
         new_cid = [np.full(a.coflow.n_flows, a.coflow_id, np.int64)
                    for a in admitted]
-        src = np.concatenate([c_src] + new_src).astype(np.int64)
-        dst = np.concatenate([c_dst] + new_dst).astype(np.int64)
-        size = np.concatenate([c_res] + new_size).astype(np.float64)
-        cid = np.concatenate([c_cid] + new_cid).astype(np.int64)
+        src = np.concatenate([c_src, d_src] + new_src).astype(np.int64)
+        dst = np.concatenate([c_dst, d_dst] + new_dst).astype(np.int64)
+        size = np.concatenate([c_res, d_res] + new_size).astype(np.float64)
+        cid = np.concatenate([c_cid, d_cid] + new_cid).astype(np.int64)
         flow_map = np.concatenate(
             [c_prev, np.full(len(src) - len(c_prev), -1, np.int64)])
 
         cf = CoflowSet(src, dst, size, topo.n_vertices)
-        p = ScheduleProblem(topo, cf, n_slots=suggest_n_slots(topo, cf,
-                                                              rho=rho),
+        p = ScheduleProblem(etopo, cf, n_slots=suggest_n_slots(etopo, cf,
+                                                               rho=rho),
                             rho=rho, q_weight=q_weight,
                             path_slack=path_slack)
+        # park flows the active failures fully disconnected: they enter
+        # the epoch problem with zero demand (degrade_problem's trick —
+        # flow indexing survives for the warm-start projection) and
+        # their residual waits in the deferred pool for a repair
+        deferred_mask = np.zeros(len(src), dtype=bool)
+        if fabric is not None and len(src) and fabric.degraded:
+            deferred_mask = ~failures.routable_flows(p) & (size > 1e-9)
+            if deferred_mask.any():
+                cf = CoflowSet(src, dst,
+                               np.where(deferred_mask, 0.0, size),
+                               topo.n_vertices)
+                p = ScheduleProblem(
+                    etopo, cf, n_slots=suggest_n_slots(etopo, cf, rho=rho),
+                    rho=rho, q_weight=q_weight, path_slack=path_slack)
+                for c in np.unique(cid[deferred_mask]):
+                    g = float(size[deferred_mask & (cid == c)].sum())
+                    chaos_log.append(f"t={t_now:.6f} deferfail "
+                                     f"coflow={int(c)} gbits={g:.6f}")
+        size_eff = np.where(deferred_mask, 0.0, size)
+
         t0 = time.perf_counter()
         # a zero-flow previous epoch has only an all-zero state to offer
         # — projecting it is a cold start in disguise, so don't call it warm
         use_warm = (warm and prev is not None and len(src) > 0
                     and prev.schedule.shape[0] > 0)
+        if fabric is not None and use_warm and cap_changed:
+            sv = solver.stranded_volume(prev, p, flow_map=flow_map)
+            epoch_stranded = float(sv.sum())
+            if epoch_stranded > 1e-9:
+                stranded_total += epoch_stranded
+                chaos_log.append(f"t={t_now:.6f} strand "
+                                 f"flows={int((sv > 1e-9).sum())} "
+                                 f"gbits={epoch_stranded:.6f}")
+        if fabric is not None and recover_open is None \
+                and (deferred_mask.any() or epoch_stranded > 1e-9):
+            # measure from the failure event itself when this boundary
+            # applied one — TTR includes the detection lag to the next
+            # boundary, not just the re-plan
+            fail_t = min((ev.t for ev in applied if ev.kind == "fail"),
+                         default=t_now)
+            recover_open = min(fail_t, t_now)
         r = solver.solve_fast_warm(p, objective,
                                    warm=prev if use_warm else None,
                                    flow_map=flow_map if use_warm else None,
@@ -391,17 +495,39 @@ def run_online(topo: Topology, trace: list[Arrival],
                                        chunk=chunk, backend=backend)
             spent += r.iterations
             tries += 1
+        if (fallback is not None and len(src) > 0
+                and (r.remaining_gbits > 1e-6 or not r.metrics.feasible)):
+            # final ladder rung (mirrors the service loop): hand the
+            # epoch to a certified baseline policy on a stretched
+            # horizon; accepted only if it drains the demand feasibly
+            p_fb = rehorizon(p, 2 * p.n_slots)
+            fb = fallback.solve(p_fb, objective, backend=backend)
+            if fb.metrics.feasible and fb.remaining_gbits <= 1e-6:
+                p, r = p_fb, fb
+                tries += 1
+                chaos_log.append(f"t={t_now:.6f} fallback "
+                                 f"policy={fallback_policy}")
         # an epoch that needed cold retries is not a clean warm sample —
         # its iteration count would attribute the retries' cold work to
         # the warm-start machinery (warm_iterations in the sweep CSV)
         warm_ran = warm_ran and tries == 0
         solve_s = time.perf_counter() - t0
+        certified = True
+        if fabric is not None and len(src) > 0:
+            cert = r.certificate or verify.check_schedule(p, r.schedule)
+            certified = bool(cert.ok)
 
-        last = not pending
+        # while future chaos events exist keep epochs short — a storm
+        # landing mid-run must be seen at the next boundary, not skipped
+        # by a drain-to-completion epoch; the run only drains once no
+        # event can change the fabric again
+        more_chaos = (fabric is not None
+                      and fabric.next_event_t is not None)
+        last = not pending and not more_chaos
         executed = p.n_slots if last else min(p.n_slots, epoch_slots)
         shipped, finish = flow_progress(p, r.schedule, executed)
-        res_after = np.maximum(size - shipped, 0.0)
-        done = res_after <= 1e-9
+        res_after = np.maximum(size_eff - shipped, 0.0)
+        done = (res_after <= 1e-9) & ~deferred_mask
         for i in np.flatnonzero(done):
             cstat = stats[int(cid[i])]
             t_done = t_now + (finish[i] if np.isfinite(finish[i])
@@ -413,33 +539,61 @@ def run_online(topo: Topology, trace: list[Arrival],
         total_energy += energy
         epochs.append(EpochStats(
             index=len(epochs), t_start=t_now, n_admitted=len(admitted),
-            n_flows=len(src), demand_gbits=float(size.sum()),
+            n_flows=len(src), demand_gbits=float(size_eff.sum()),
             n_slots=p.n_slots, executed_slots=executed,
-            shipped_gbits=float(np.minimum(shipped, size).sum()),
+            shipped_gbits=float(np.minimum(shipped, size_eff).sum()),
             backlog_gbits=float(res_after.sum()), energy_j=energy,
             iterations=spent, warm=warm_ran,
             feasible=bool(r.metrics.feasible),
             max_violation=float(r.metrics.max_violation),
             lp_primal_residual=float(r.lp_primal_residual),
-            solve_s=solve_s))
+            solve_s=solve_s,
+            chaos_events=n_chaos,
+            degraded=fabric.degraded if fabric is not None else False,
+            stranded_gbits=epoch_stranded,
+            deferred_gbits=float(size[deferred_mask].sum()),
+            certified=certified))
 
-        keep = ~done
+        keep = ~done & ~deferred_mask
         c_src, c_dst = src[keep], dst[keep]
         c_res, c_cid = res_after[keep], cid[keep]
         c_prev = np.flatnonzero(keep).astype(np.int64)
+        d_src, d_dst = src[deferred_mask], dst[deferred_mask]
+        d_res, d_cid = size[deferred_mask], cid[deferred_mask]
         prev = r
+        # the episode closes at the boundary whose certified re-plan
+        # carried no deferred demand — service restored, even if the
+        # re-routed schedule still has slots left to run
+        if (fabric is not None and recover_open is not None
+                and not d_res.size and certified):
+            recoveries.append(t_now - recover_open)
+            chaos_log.append(f"t={t_now:.6f} recover "
+                             f"ttr={recoveries[-1]:.6f}")
+            recover_open = None
         t_now += D * executed
-        if not c_res.size and pending and pending[0].t_arrive > t_now + 1e-9:
+        if not c_res.size and not d_res.size and pending \
+                and pending[0].t_arrive > t_now + 1e-9:
             # idle gap: jump straight to the epoch boundary that admits
             # the next arrival instead of spinning empty epochs
             gap = pending[0].t_arrive - t_now
             t_now += epoch_s * np.ceil(gap / epoch_s - 1e-9)
+        elif (fabric is not None and d_res.size and not c_res.size
+              and not pending):
+            # only deferred-by-failure demand remains: wait for the
+            # repair that reconnects it, or stop if none can ever come
+            nxt = fabric.next_event_t
+            if nxt is None:
+                break
+            if nxt > t_now + 1e-9:
+                gap = nxt - t_now
+                t_now += epoch_s * np.ceil(gap / epoch_s - 1e-9)
 
     finished = [c for c in stats.values() if np.isfinite(c.t_done)
                 and unfinished[c.coflow_id] == 0]
     responses = [c.response_s for c in finished]
     # unserved demand when the driver stopped: carried residuals plus —
-    # if max_epochs truncated the run — co-flows never even admitted
+    # if max_epochs truncated the run — co-flows never even admitted;
+    # deferred-by-failure demand is accounted separately (never shed)
     backlog = float(c_res.sum()) + sum(a.coflow.total_gbits
                                        for a in pending)
     return OnlineResult(
@@ -450,4 +604,9 @@ def run_online(topo: Topology, trace: list[Arrival],
         mean_response_s=float(np.mean(responses)) if responses else np.nan,
         backlog_gbits=backlog,
         total_iterations=int(sum(e.iterations for e in epochs)),
-        last_result=prev)
+        last_result=prev,
+        availability=chaosmod.availability(chaos or [], t_now),
+        stranded_gbits=stranded_total,
+        deferred_failure_gbits=float(d_res.sum()),
+        recoveries=recoveries,
+        chaos_log=chaos_log)

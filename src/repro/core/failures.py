@@ -83,6 +83,82 @@ def degradation_ratio(healthy: Topology, degraded: Topology) -> float:
     return 1.0 - float(degraded.cap.sum()) / max(total, 1e-12)
 
 
+def affected_rows(topo: Topology, scen: FailureScenario) -> np.ndarray:
+    """(E,) bool mask of the capacity rows `apply` touches for `scen`.
+
+    A global `cap_scale` touches every row; cuts, device outages and
+    per-edge brown-outs touch exactly their incident rows.  This is the
+    support of the degradation — `repair` restores precisely these rows
+    from the healthy topology."""
+    rows = np.zeros(topo.n_edges, dtype=bool)
+    if scen.cap_scale != 1.0:
+        rows[:] = True
+        return rows
+    for e, _ in scen.edge_scale:
+        rows[int(e)] = True
+    if scen.cut_edges:
+        rows[list(scen.cut_edges)] = True
+    if scen.failed_devices:
+        down = np.asarray(scen.failed_devices)
+        rows |= (np.isin(topo.edges[:, 0], down)
+                 | np.isin(topo.edges[:, 1], down))
+    return rows
+
+
+def compose(scens, name: str | None = None) -> FailureScenario:
+    """Combine concurrently active scenarios into one.
+
+    Cuts and device outages union; global scales multiply; per-edge
+    brown-outs concatenate (in the given order — `apply` multiplies them
+    in sequence, which is deterministic for a deterministic ordering).
+    The chaos engine (core.chaos) applies the composition of the active
+    set to the *pristine* topology at every state change, so repairing
+    the last active failure is exact by construction."""
+    scens = [s for s in scens if not s.is_noop]
+    if not scens:
+        return FailureScenario("none")
+    if len(scens) == 1 and name is None:
+        return scens[0]
+    cut: list[int] = []
+    dev: list[int] = []
+    scale = 1.0
+    edge_scale: list[tuple[int, float]] = []
+    for s in scens:
+        cut.extend(s.cut_edges)
+        dev.extend(s.failed_devices)
+        scale *= s.cap_scale
+        edge_scale.extend(s.edge_scale)
+    return FailureScenario(
+        name or "+".join(s.name for s in scens),
+        cut_edges=tuple(sorted(set(cut))),
+        failed_devices=tuple(sorted(set(dev))),
+        cap_scale=scale, edge_scale=tuple(edge_scale))
+
+
+def repair(degraded: Topology, scen: FailureScenario,
+           healthy: Topology) -> Topology:
+    """Exact inverse of ``apply(healthy, scen)``.
+
+    `apply` is lossy (a cut zeroes capacity; a brown-out multiplies in
+    floating point), so the inverse restores the affected rows from the
+    healthy reference instead of trying to invert arithmetic: the result
+    is *bit-identical* to `healthy` — same capacity bytes, same name,
+    and therefore the same solver structure-cache key.  Raises if
+    `degraded` is not actually ``apply(healthy, scen)`` (rows outside
+    the scenario's support differ from the healthy capacities)."""
+    if degraded.n_edges != healthy.n_edges:
+        raise ValueError("degraded/healthy topologies differ in shape")
+    rows = affected_rows(healthy, scen)
+    cap = degraded.cap.copy()
+    cap[rows] = healthy.cap[rows]
+    if not np.array_equal(cap, healthy.cap):
+        raise ValueError(
+            f"cannot repair {degraded.name!r}: capacities outside "
+            f"{scen.name!r}'s support differ from {healthy.name!r} — "
+            f"it is not apply(healthy, scen)")
+    return dataclasses.replace(healthy, cap=healthy.cap.copy())
+
+
 # ---------------------------------------------------------------------------
 # Scenario constructors
 # ---------------------------------------------------------------------------

@@ -2104,6 +2104,38 @@ def project_warm_start(warm: FastPathResult, p_dst: ScheduleProblem,
     return x0, y0
 
 
+def stranded_volume(warm: FastPathResult, p_dst: ScheduleProblem, *,
+                    flow_map: np.ndarray | None = None) -> np.ndarray:
+    """(F_dst,) Gbits of `warm`'s decomposed path volume whose hops died.
+
+    A path is *stranded* when any of its (edge, wavelength) hops is no
+    longer admissible under `p_dst` (capacity zeroed by a failure, or
+    the hop pruned from the flow's edge mask).  This is exactly the
+    volume `project_warm_start` drops and re-routes via the surviving
+    admissible routes — the chaos drivers (core.arrivals.run_online,
+    service.loop.run_service) report its sum as stranded-Gbits
+    re-routed.  `flow_map` has project_warm_start's semantics; per-flow
+    totals are clipped to the dst residual demand.  Returns zeros when
+    the warm result carries no decomposed paths."""
+    F = p_dst.coflow.n_flows
+    stranded = np.zeros(F)
+    if warm.index is None or not warm.paths:
+        return stranded
+    dst_of = ({int(s): i for i, s in enumerate(np.asarray(flow_map))
+               if s >= 0} if flow_map is not None else None)
+    ke_s, kw_s = warm.index.ke, warm.index.kw
+    for path in warm.paths:
+        f = (path.flow if dst_of is None else dst_of.get(path.flow, -1))
+        if f < 0 or f >= F or path.volume <= 0.0:
+            continue
+        dead = any(not (p_dst.edge_w_ok[int(ke_s[k]), int(kw_s[k])]
+                        and p_dst.flow_edge_mask[f, int(ke_s[k])])
+                   for k in path.triples)
+        if dead:
+            stranded[f] += path.volume
+    return np.minimum(stranded, p_dst.coflow.size)
+
+
 def resolve_incremental(p: ScheduleProblem, objective: str,
                         warm: FastPathResult, *, iters: int = 4000,
                         tol: float | None = None,

@@ -473,6 +473,107 @@ def pon_multicell(n_cells: int = 2, n_racks: int = 4,
     return topo
 
 
+def pon_cascaded(n_cells: int = 2, n_racks: int = 4,
+                 servers_per_rack: int = 2,
+                 slot_duration: float = 0.25) -> Topology:
+    """Cascaded-AWGR PON DCN (arXiv:2111.01263 style, two passive stages).
+
+    Each cell is an AWGR-centric PON3 instance (polymer backplanes,
+    tunable-TX servers, cyclic-AWGR wavelength fabric, one OLT card).
+    Unlike `pon_multicell` — whose cells meet at an *electronic* hub
+    chassis — the cells here interconnect through a second, entirely
+    passive AWGR stage: each cell's OLT card feeds a cascade ingress
+    port, and the stage-2 AWGR wavelength-routes cell c -> cell c' on
+    the cyclic table `awgr_lambda(n_cells)`.  The only electronic
+    devices in the inter-cell path are the two OLT cards themselves,
+    which perform wavelength conversion between the stage-1 and stage-2
+    λ-plans; the core is zero-power.
+
+    Wavelength budget: stage 1 uses n_racks wavelengths per cell (G-1
+    for G = racks + OLT), stage 2 uses n_cells - 1, and the fabric
+    carries max of the two.  Same uniform schema as pon3: directional
+    AWGR edges, servers never relay (eq. 46), one TX wavelength per
+    server per slot (eq. 47)."""
+    if n_cells < 2:
+        raise ValueError(f"n_cells must be >= 2, got {n_cells}")
+    G = n_racks + 1
+    lam = awgr_lambda(G)
+    lam2 = awgr_lambda(n_cells)
+    n_w = max(n_racks, n_cells - 1)
+    b = _Builder(f"pon-cascaded-{n_cells}x{n_racks}")
+    awgr_ins: list[int] = []
+    bps_all: list[int] = []
+    cards: list[int] = []
+    cas_in: list[int] = []
+    cas_out: list[int] = []
+    for cell in range(n_cells):
+        olt = b.add(f"olt{cell}", KIND_SWITCH, O_OLT)
+        cards.append(olt)
+        ins, outs = [], []
+        for r in range(n_racks):
+            bp = b.add(f"backplane{cell}.{r}", KIND_SWITCH, O_BACKPLANE)
+            ain = b.add(f"awgr_in{cell}.{r}", KIND_PASSIVE)
+            aout = b.add(f"awgr_out{cell}.{r}", KIND_PASSIVE)
+            bps_all.append(bp); ins.append(ain); outs.append(aout)
+            for i in range(servers_per_rack):
+                sv = b.add(f"srv{cell}.{r}.{i}", KIND_SERVER, P_TUNABLE)
+                b.link(sv, bp, _grey(n_w))
+                b.edges.append((sv, ain))
+                b.caps.append(np.full(n_w, LINK_GBPS))
+                b.edges.append((aout, sv))
+                b.caps.append(np.full(n_w, LINK_GBPS))
+        olt_in = b.add(f"awgr_in_olt{cell}", KIND_PASSIVE)
+        olt_out = b.add(f"awgr_out_olt{cell}", KIND_PASSIVE)
+        b.edges.append((olt, olt_in)); b.caps.append(np.full(n_w, LINK_GBPS))
+        b.edges.append((olt_out, olt)); b.caps.append(np.full(n_w, LINK_GBPS))
+        ins_all = ins + [olt_in]
+        outs_all = outs + [olt_out]
+        # stage-1 AWGR: wavelengths 0..n_racks-1 inside the cell
+        for s in range(G):
+            for d_ in range(G):
+                if s == d_:
+                    continue
+                row = np.zeros(n_w)
+                row[int(lam[s, d_])] = LINK_GBPS
+                b.edges.append((ins_all[s], outs_all[d_]))
+                b.caps.append(row)
+        awgr_ins += ins_all
+        # cascade ports: the OLT card converts any stage-1 wavelength
+        # onto the stage-2 λ-plan (full-WDM feeder both ways)
+        cin = b.add(f"cas_in{cell}", KIND_PASSIVE)
+        cout = b.add(f"cas_out{cell}", KIND_PASSIVE)
+        cas_in.append(cin); cas_out.append(cout)
+        b.edges.append((olt, cin)); b.caps.append(np.full(n_w, LINK_GBPS))
+        b.edges.append((cout, olt)); b.caps.append(np.full(n_w, LINK_GBPS))
+    # stage-2 AWGR: cell c -> cell c' on wavelength lam2[c, c'] — a
+    # latin square over 0..n_cells-2, the passive core of the cascade
+    for c in range(n_cells):
+        for c2 in range(n_cells):
+            if c == c2:
+                continue
+            row = np.zeros(n_w)
+            row[int(lam2[c, c2])] = LINK_GBPS
+            b.edges.append((cas_in[c], cas_out[c2]))
+            b.caps.append(row)
+
+    edges = np.asarray(b.edges, dtype=np.int32)
+    cap = np.stack(b.caps)
+    topo = Topology(
+        name=b.name, devices=b.devices, edges=edges, cap=cap,
+        n_wavelengths=n_w, slot_duration=slot_duration,
+        task_servers=[i for i, d in enumerate(b.devices)
+                      if d.kind == KIND_SERVER],
+        server_relay=False, one_wavelength_tx=True,
+        awgr_in_ports=awgr_ins + cas_in,
+        switch_sigma={**{c: 2 * n_w * LINK_GBPS for c in cards},
+                      **{bp: servers_per_rack * LINK_GBPS
+                         for bp in bps_all}})
+    # NOTE: like pon3, AWGR paths are one-way, so Topology.validate()'s
+    # bidirectional check is skipped.
+    assert cap.shape == (edges.shape[0], n_w)
+    return topo
+
+
 BUILDERS = {
     "fat-tree": fat_tree,
     "spine-leaf": spine_leaf,
@@ -482,6 +583,7 @@ BUILDERS = {
     "pon3": pon3,
     "pon5": pon5,
     "pon-multicell": pon_multicell,
+    "pon-cascaded": pon_cascaded,
 }
 
 

@@ -11,11 +11,12 @@ from . import clock, loop, metrics
 from .clock import SolveCostModel, VirtualClock
 from .loop import (Request, ServiceConfig, ServiceEvent, ServiceResult,
                    TenantResult, TenantSpec, run_service)
-from .metrics import LatencyStats, ServiceCounters, nearest_rank
+from .metrics import (LatencyStats, RobustnessStats, ServiceCounters,
+                      nearest_rank)
 
 __all__ = [
-    "LatencyStats", "Request", "ServiceConfig", "ServiceCounters",
-    "ServiceEvent", "ServiceResult", "SolveCostModel", "TenantResult",
-    "TenantSpec", "VirtualClock", "clock", "loop", "metrics",
-    "nearest_rank", "run_service",
+    "LatencyStats", "Request", "RobustnessStats", "ServiceConfig",
+    "ServiceCounters", "ServiceEvent", "ServiceResult", "SolveCostModel",
+    "TenantResult", "TenantSpec", "VirtualClock", "clock", "loop",
+    "metrics", "nearest_rank", "run_service",
 ]

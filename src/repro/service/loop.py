@@ -52,7 +52,8 @@ from concurrent.futures import ThreadPoolExecutor
 
 import numpy as np
 
-from ..core import solver, verify
+from ..core import failures, solver, verify
+from ..core import chaos as chaosmod
 from ..core import policies as policy_zoo
 from ..core.arrivals import (Arrival, ArrivalSpec, TenantArrival,
                              flow_progress, generate_trace,
@@ -62,7 +63,7 @@ from ..core.timeslot import (ScheduleProblem, prefix_energy, rehorizon,
 from ..core.topology import Topology
 from ..core.traffic import CoflowSet, TrafficPattern
 from .clock import SolveCostModel, VirtualClock
-from .metrics import LatencyStats, ServiceCounters
+from .metrics import LatencyStats, RobustnessStats, ServiceCounters
 
 
 @dataclasses.dataclass(frozen=True)
@@ -124,6 +125,13 @@ class ServiceConfig:
                                     # None disables the tier
     verify_schedules: bool = False  # assert a core.verify feasibility
                                     # certificate on every member result
+    chaos: tuple[str, ...] = ()     # core.chaos PRESETS to replay per
+                                    # tenant (failure/repair events at
+                                    # window boundaries); empty disables
+                                    # the engine — and leaves event logs
+                                    # byte-identical to healthy runs
+    chaos_seed: int = 0             # chaos trace seed (per-tenant
+                                    # streams derive from seed + index)
 
 
 @dataclasses.dataclass
@@ -176,6 +184,10 @@ class ServiceResult:
     makespan_s: float
     total_energy_j: float
     backlog_gbits: float
+    robustness: RobustnessStats = dataclasses.field(
+        default_factory=RobustnessStats)
+    latency_degraded: LatencyStats = dataclasses.field(
+        default_factory=LatencyStats)
 
     def event_log(self) -> str:
         """The canonical event log: one line per event, in order.
@@ -211,6 +223,23 @@ class _Tenant:
     prev: solver.FastPathResult | None = None
     admitted: list = dataclasses.field(default_factory=list)
     unfinished: dict = dataclasses.field(default_factory=dict)
+    # chaos-replay state (inert unless ServiceConfig.chaos is set):
+    # the per-tenant fabric, the deferred-by-failure flow pool, and the
+    # open recovery episode
+    fabric: chaosmod.FabricState | None = None
+    d_src: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, np.int64))
+    d_dst: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, np.int64))
+    d_res: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, np.float64))
+    d_cid: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, np.int64))
+    retry_deferred: bool = False    # a boundary changed the fabric while
+                                    # deferred demand waited — re-probe
+    cap_changed: bool = False       # capacities changed at this boundary
+    last_fail_t: float | None = None
+    recover_open: float | None = None
 
     @property
     def backlog_gbits(self) -> float:
@@ -218,8 +247,13 @@ class _Tenant:
         return carried + sum(a.coflow.total_gbits for a in self.admitted)
 
     @property
+    def deferred_gbits(self) -> float:
+        return float(self.d_res.sum())
+
+    @property
     def ready(self) -> bool:
-        return bool(self.admitted) or self.c_res.size > 0
+        return (bool(self.admitted) or self.c_res.size > 0
+                or self.retry_deferred)
 
 
 def _merge(st: _Tenant) -> tuple[ScheduleProblem, np.ndarray, np.ndarray,
@@ -286,6 +320,18 @@ def run_service(tenants: list[TenantSpec],
 
     states = [_Tenant(t, max(1, int(round(window_s / t.topo.slot_duration))))
               for t in tenants]
+    if config.chaos:
+        # one independent seeded fabric per tenant; traces are pure
+        # functions of (topo, presets, derived seed), so any consumer
+        # can regenerate them byte-identically
+        for k, st in enumerate(states):
+            st.fabric = chaosmod.FabricState(
+                st.spec.topo,
+                chaosmod.generate_preset_events(
+                    st.spec.topo, config.chaos,
+                    seed=config.chaos_seed * 65536 + k))
+    robustness = RobustnessStats()
+    latency_degraded = LatencyStats()
     stream: list[TenantArrival] = interleave_traces(
         [t.make_trace() for t in tenants])
     requests: dict[tuple[int, int], Request] = {}
@@ -354,36 +400,137 @@ def run_service(tenants: list[TenantSpec],
                     still_waiting.append(ta)
             waiting = still_waiting
 
+            # -- chaos: replay every due failure/repair event on each
+            # tenant's fabric.  A changed fabric with parked
+            # deferred-by-failure demand makes the tenant ready again
+            # (retry_deferred) so repairs are probed at this boundary.
+            if config.chaos:
+                for k, st in enumerate(states):
+                    applied, changed = st.fabric.advance_to(t_w)
+                    fail_ts = [ev.t for ev in applied if ev.kind == "fail"]
+                    for ev in applied:
+                        counters.chaos_events += 1
+                        emit(ev.kind, f"tenant={k} event={ev.event_id} "
+                                      f"scenario={ev.scenario.name}")
+                    if changed:
+                        st.cap_changed = True
+                        if st.d_res.size:
+                            st.retry_deferred = True
+                    if fail_ts:
+                        st.last_fail_t = min(fail_ts)
+
             ready = [k for k, st in enumerate(states) if st.ready]
             if not ready:
+                # a tenant whose demand is deferred-by-failure is not
+                # "ready" (nothing routable) but is not drained either:
+                # wait for its fabric's next event, never break on it
+                nxt_evt = None
+                if config.chaos:
+                    ts = [st.fabric.next_event_t for st in states
+                          if st.d_res.size
+                          and st.fabric.next_event_t is not None]
+                    nxt_evt = min(ts) if ts else None
                 if next_arr >= len(stream) and not waiting:
-                    break           # drained: stream done, queues empty
-                # idle gap: jump to the grid boundary admitting the next
-                # arrival (or just the next boundary if only deferrals
-                # are waiting for backlog to clear — impossible here
-                # since an idle tenant always admits, so the stream
-                # cursor is what we wait on)
-                t_next = stream[next_arr].arrival.t_arrive
+                    if nxt_evt is None:
+                        break       # drained: stream done, queues empty
+                                    # (deferred demand, if any, can never
+                                    # reconnect — reported as deferred)
+                    t_next = nxt_evt
+                else:
+                    # idle gap: jump to the grid boundary admitting the
+                    # next arrival (or the next chaos event touching a
+                    # deferred tenant, whichever lands first)
+                    t_next = stream[next_arr].arrival.t_arrive
+                    if nxt_evt is not None:
+                        t_next = min(t_next, nxt_evt)
                 steps = max(1.0, np.ceil((t_next - t_w) / window_s - 1e-9))
                 clock.advance_to(t_w + window_s * steps)
                 continue
 
-            last = next_arr >= len(stream) and not waiting
+            more_chaos = config.chaos and any(
+                st.fabric.next_event_t is not None for st in states)
+            last = (next_arr >= len(stream) and not waiting
+                    and not more_chaos)
 
             # -- build each ready tenant's merged epoch problem + LP
             members = {}
             for k in ready:
                 st = states[k]
                 src, dst, size, cid, flow_map = _merge(st)
+                if config.chaos and st.d_res.size:
+                    # deferred-by-failure flows rejoin every boundary's
+                    # candidate set (cold, flow_map -1); routability on
+                    # the *current* fabric decides their fate below
+                    src = np.concatenate([src, st.d_src])
+                    dst = np.concatenate([dst, st.d_dst])
+                    size = np.concatenate([size, st.d_res])
+                    cid = np.concatenate([cid, st.d_cid])
+                    flow_map = np.concatenate(
+                        [flow_map, np.full(st.d_res.size, -1, np.int64)])
+                topo_k = (st.fabric.topo if config.chaos
+                          else st.spec.topo)
                 cf = CoflowSet(src, dst, size, st.spec.topo.n_vertices)
                 p = ScheduleProblem(
-                    st.spec.topo, cf,
-                    n_slots=suggest_n_slots(st.spec.topo, cf, rho=config.rho),
+                    topo_k, cf,
+                    n_slots=suggest_n_slots(topo_k, cf, rho=config.rho),
                     rho=config.rho, q_weight=config.q_weight,
                     path_slack=config.path_slack)
+                deferred = np.zeros(len(size), bool)
+                if config.chaos and st.fabric.degraded:
+                    # flows whose endpoints the active failures
+                    # disconnected enter the problem with zero size
+                    # (index-preserving, so warm-start projection still
+                    # lines up) and park as deferred-by-failure — never
+                    # silently shed
+                    deferred = ~failures.routable_flows(p) & (size > 1e-9)
+                    if deferred.any():
+                        cf = CoflowSet(src, dst,
+                                       np.where(deferred, 0.0, size),
+                                       st.spec.topo.n_vertices)
+                        # recompute the horizon for the surviving demand
+                        # — a disconnected source makes the first
+                        # estimate balloon (offered Gbits over ~zero
+                        # admissible egress capacity)
+                        p = ScheduleProblem(
+                            topo_k, cf,
+                            n_slots=suggest_n_slots(topo_k, cf,
+                                                    rho=config.rho),
+                            rho=config.rho, q_weight=config.q_weight,
+                            path_slack=config.path_slack)
+                        n_def = int(deferred.sum())
+                        counters.failure_deferrals += n_def
+                        emit("deferfail",
+                             f"tenant={k} flows={n_def} "
+                             f"gbits={float(size[deferred].sum()):.6f}")
+                        if st.recover_open is None:
+                            st.recover_open = min(
+                                st.last_fail_t if st.last_fail_t
+                                is not None else t_w, t_w)
+                if (config.chaos and st.cap_changed and config.warm
+                        and st.prev is not None
+                        and st.prev.schedule.shape[0] > 0):
+                    # carried flows whose decomposed paths died: the
+                    # warm-start projection drops and re-routes exactly
+                    # this volume — account it as stranded
+                    sv = solver.stranded_volume(st.prev, p,
+                                                flow_map=flow_map)
+                    g_str = float(sv.sum())
+                    if g_str > 1e-9:
+                        n_str = int((sv > 1e-9).sum())
+                        robustness.stranded_gbits += g_str
+                        counters.stranded_flows += n_str
+                        emit("strand", f"tenant={k} flows={n_str} "
+                                       f"gbits={g_str:.6f}")
+                        if st.recover_open is None:
+                            st.recover_open = min(
+                                st.last_fail_t if st.last_fail_t
+                                is not None else t_w, t_w)
+                st.cap_changed = False
+                st.retry_deferred = False
                 lp, _ = solver.build_routing_lp(p, st.spec.objective)
                 members[k] = dict(p=p, src=src, dst=dst, size=size, cid=cid,
-                                  flow_map=flow_map, key=_shape_key(lp))
+                                  flow_map=flow_map, deferred=deferred,
+                                  key=_shape_key(lp))
 
             # -- coalesce: same-bucket tenants share one stacked dispatch
             if config.coalesce:
@@ -471,7 +618,11 @@ def run_service(tenants: list[TenantSpec],
                             emit("fallback",
                                  f"tenant={k} window={window} "
                                  f"policy={config.fallback_policy}")
-                    if config.verify_schedules:
+                    if config.verify_schedules or config.chaos:
+                        # under chaos every post-failure schedule must
+                        # carry a feasibility certificate — a degraded
+                        # fabric is exactly when a stale plan would
+                        # oversubscribe a dead link
                         cert = r.certificate or verify.check_schedule(
                             m["p"], r.schedule)
                         cert.assert_ok(f"tenant {k} window {window}")
@@ -493,6 +644,8 @@ def run_service(tenants: list[TenantSpec],
                         req.t_decision = control_free
                         lat = req.latency_s
                         latency.add(lat)
+                        if config.chaos and states[k].fabric.degraded:
+                            latency_degraded.add(lat)
                         if lat > config.slo_p99_s:
                             counters.slo_breaches += 1
                         emit("sched", f"tenant={k} coflow={a.coflow_id} "
@@ -505,12 +658,14 @@ def run_service(tenants: list[TenantSpec],
                 st, m = states[k], members[k]
                 p, r = m["p"], m["result"]
                 size, cid = m["size"], m["cid"]
+                mask = m["deferred"]
+                size_eff = np.where(mask, 0.0, size)
                 D = st.spec.topo.slot_duration
                 executed = (p.n_slots if last
                             else min(p.n_slots, st.window_slots))
                 shipped, finish = flow_progress(p, r.schedule, executed)
-                res_after = np.maximum(size - shipped, 0.0)
-                done = res_after <= 1e-9
+                res_after = np.maximum(size_eff - shipped, 0.0)
+                done = (res_after <= 1e-9) & ~mask
                 for i in np.flatnonzero(done):
                     c = int(cid[i])
                     t_done = t_w + (finish[i] if np.isfinite(finish[i])
@@ -533,18 +688,33 @@ def run_service(tenants: list[TenantSpec],
                 total_energy += energy
                 tres[k].energy_j += energy
                 tres[k].shipped_gbits += float(
-                    np.minimum(shipped, size).sum())
-                keep = ~done
+                    np.minimum(shipped, size_eff).sum())
+                keep = ~done & ~mask
                 st.c_src = m["src"][keep]
                 st.c_dst = m["dst"][keep]
                 st.c_res = res_after[keep]
                 st.c_cid = cid[keep]
                 st.c_prev = np.flatnonzero(keep).astype(np.int64)
+                if config.chaos:
+                    # park deferred flows (original residual size) until
+                    # a boundary whose fabric reconnects their endpoints
+                    st.d_src = m["src"][mask]
+                    st.d_dst = m["dst"][mask]
+                    st.d_res = size[mask]
+                    st.d_cid = cid[mask]
                 st.prev = r
                 st.admitted = []
                 emit("exec", f"window={window} tenant={k} slots={executed} "
-                             f"shipped={float(np.minimum(shipped, size).sum()):.6f} "
+                             f"shipped={float(np.minimum(shipped, size_eff).sum()):.6f} "
                              f"backlog={float(st.c_res.sum()):.6f}")
+                if (config.chaos and st.recover_open is not None
+                        and not st.d_res.size and r.metrics.feasible):
+                    # episode closes at the first boundary whose
+                    # certified re-plan carries no deferred demand
+                    ttr = t_w - st.recover_open
+                    robustness.recoveries.append(ttr)
+                    emit("recover", f"tenant={k} ttr={ttr:.6f}")
+                    st.recover_open = None
 
             counters.windows += 1
             window += 1
@@ -574,10 +744,21 @@ def run_service(tenants: list[TenantSpec],
                    for i in range(next_arr, len(stream)))
     for k, st in enumerate(states):
         tres[k].backlog_gbits = st.backlog_gbits
+    if config.chaos:
+        # availability is trace-exact over the observed span, not a
+        # function of the window grid the trace was replayed on
+        t_end = clock.now()
+        for st in states:
+            robustness.span_s += t_end
+            robustness.degraded_s += chaosmod.degraded_seconds(
+                st.fabric.events, t_end)
+            robustness.deferred_gbits += st.deferred_gbits
+        robustness.events_applied = counters.chaos_events
     return ServiceResult(
         events=events,
         requests=sorted(requests.values(),
                         key=lambda r: (r.t_arrive, r.tenant, r.coflow_id)),
         tenants=tres, latency=latency, counters=counters,
         makespan_s=makespan, total_energy_j=total_energy,
-        backlog_gbits=float(backlog))
+        backlog_gbits=float(backlog), robustness=robustness,
+        latency_degraded=latency_degraded)

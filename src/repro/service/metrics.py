@@ -93,3 +93,48 @@ class ServiceCounters:
                                # retry ladder exhausted
     slo_breaches: int = 0      # requests whose decision latency > slo
     windows: int = 0           # coalescing windows executed
+    chaos_events: int = 0      # chaos fail/repair events applied at
+                               # window boundaries (core.chaos replay)
+    stranded_flows: int = 0    # carried flows whose decomposed paths a
+                               # failure killed (volume re-routed by the
+                               # warm-start projection)
+    failure_deferrals: int = 0 # flows parked as deferred-by-failure
+                               # (endpoints disconnected; re-admitted on
+                               # repair, never silently shed)
+
+
+@dataclasses.dataclass
+class RobustnessStats:
+    """Chaos-replay outcome of one run (defaults on a healthy run).
+
+    `availability` is the fraction of observed tenant-time with full
+    admissible capacity — trace-exact, integrated piecewise between
+    event times (core.chaos.degraded_seconds), independent of the
+    window grid the trace was replayed on.  `recoveries` holds one
+    time-to-recover sample per episode: from the failure event that
+    stranded or deferred demand to the first certified re-plan whose
+    deferred pool was empty.  See docs/CHAOS.md for definitions."""
+
+    degraded_s: float = 0.0        # tenant-seconds with >= 1 active failure
+    span_s: float = 0.0            # tenant-seconds observed
+    events_applied: int = 0        # fail/repair events replayed
+    stranded_gbits: float = 0.0    # carried volume re-routed after its
+                                   # decomposed paths died
+    deferred_gbits: float = 0.0    # demand still deferred-by-failure at
+                                   # exit (endpoints never reconnected)
+    recoveries: list[float] = dataclasses.field(default_factory=list)
+
+    @property
+    def availability(self) -> float:
+        if self.span_s <= 0.0:
+            return 1.0
+        return 1.0 - self.degraded_s / self.span_s
+
+    @property
+    def mean_recover_s(self) -> float:
+        return (float(np.mean(self.recoveries)) if self.recoveries
+                else float("nan"))
+
+    @property
+    def p50_recover_s(self) -> float:
+        return nearest_rank(self.recoveries, 50.0)

@@ -19,6 +19,7 @@ import time
 
 from repro import search
 from repro.core import arrivals, failures, solver, topology, traffic
+from repro.core import chaos as chaosmod
 from repro.core import policies as policy_zoo
 
 from .report import write_csv, write_markdown
@@ -60,9 +61,12 @@ def _run_service_smoke(args) -> int:
                                     n_reduce=args.n_reduce),
             arrivals=spec, seed=k)
         for k in range(args.service)]
+    chaos = (_csv_list(args.chaos, chaosmod.PRESETS, "chaos preset")
+             if args.chaos else ())
     cfg = service.ServiceConfig(window_s=args.epoch_s or None,
                                 iters=args.iters, backend=args.backend,
-                                slo_p99_s=args.slo_s)
+                                slo_p99_s=args.slo_s,
+                                chaos=chaos, chaos_seed=args.chaos_seed)
     t0 = time.perf_counter()
     res = service.run_service(tenants, cfg)
     wall = time.perf_counter() - t0
@@ -78,11 +82,24 @@ def _run_service_smoke(args) -> int:
     print(f"  makespan={res.makespan_s:.3f} s "
           f"energy={res.total_energy_j:.1f} J "
           f"backlog={res.backlog_gbits:.6f} Gbits")
+    if chaos:
+        rb, dlat = res.robustness, res.latency_degraded
+        print(f"  Availability={rb.availability:.4f} "
+              f"(events={rb.events_applied}, "
+              f"degraded {rb.degraded_s:.2f}/{rb.span_s:.2f} tenant-s)")
+        print(f"  stranded={rb.stranded_gbits:.6f} Gbits re-routed, "
+              f"deferred-by-failure={rb.deferred_gbits:.6f} Gbits, "
+              f"recoveries={len(rb.recoveries)} "
+              f"(mean ttr={rb.mean_recover_s:.3f} s)")
+        print(f"  degraded-mode latency p99={dlat.p99:.6f} s "
+              f"({dlat.count} decisions under degradation)")
     out = pathlib.Path(args.out)
     out.mkdir(parents=True, exist_ok=True)
     log_path = out / "service_events.log"
     log_path.write_text(res.event_log() + "\n")
     print(f"  event log -> {log_path} ({len(res.events)} events)")
+    # deferred-by-failure demand is a fabric outcome, not a leak; only
+    # routable demand left behind fails the smoke
     return 1 if res.backlog_gbits > 1e-6 else 0
 
 
@@ -128,6 +145,19 @@ def main(argv=None) -> int:
                          "re-solves (core.arrivals): comma list or 'all' "
                          f"({', '.join(arrivals.FAMILIES)}); "
                          "bare --arrivals means 'all'")
+    ap.add_argument("--chaos", nargs="?", const="all", default="",
+                    help="chaos-replay axis (core.chaos): per preset and "
+                         "seed, replay a deterministic failure/repair "
+                         "event trace under a rolling-horizon poisson "
+                         "run, recording availability, stranded Gbits, "
+                         "time-to-recover, and deferred-by-failure "
+                         "demand; comma list or 'all' "
+                         f"({', '.join(chaosmod.PRESETS)}); bare --chaos "
+                         "means 'all'; also writes the per-cell event "
+                         "traces to <out>/chaos_events.log")
+    ap.add_argument("--chaos-seed", type=int, default=0,
+                    help="offset added to per-cell seeds when drawing "
+                         "chaos event traces (--service mode)")
     ap.add_argument("--arrival-coflows", type=int, default=5,
                     help="co-flows per arrival trace")
     ap.add_argument("--arrival-mean-s", type=float, default=2.0,
@@ -211,6 +241,8 @@ def main(argv=None) -> int:
         arrivals=(_csv_list(args.arrivals, arrivals.FAMILIES,
                             "arrival family")
                   if args.arrivals else ()),
+        chaos=(_csv_list(args.chaos, chaosmod.PRESETS, "chaos preset")
+               if args.chaos else ()),
         policies=(_csv_list(args.policy, policy_zoo.POLICIES, "policy")
                   if args.policy else ()),
         placement_search=(_csv_list(args.placement_search, search.METHODS,
@@ -240,6 +272,23 @@ def main(argv=None) -> int:
     t_report = time.perf_counter()
     csv_path = write_csv(records, out / "results.csv")
     md_path = write_markdown(records, out / "results.md")
+    if spec.chaos:
+        # the replayed event traces, regenerated byte-identically: they
+        # are pure functions of (topology, preset, seed), so this is
+        # exactly what every chaos cell above saw
+        trace_lines = []
+        for topo_name in spec.topos:
+            topo = topology.build(topo_name)
+            for preset in spec.chaos:
+                for seed in spec.seeds:
+                    evs = chaosmod.generate_preset_events(
+                        topo, (preset,), int(seed))
+                    trace_lines.append(f"# topo={topo_name} "
+                                       f"chaos={preset} seed={seed}")
+                    trace_lines.append(chaosmod.format_trace(evs))
+        trace_path = out / "chaos_events.log"
+        trace_path.write_text("\n".join(trace_lines) + "\n")
+        print(f"chaos event traces -> {trace_path}")
     if args.profile:
         print(f"    profile report: "
               f"{(time.perf_counter() - t_report) * 1e3:.1f} ms")

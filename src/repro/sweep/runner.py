@@ -36,6 +36,7 @@ import numpy as np
 from repro import search
 from repro.core import (arrivals, failures, oracle, solver, timeslot,
                         topology, traffic)
+from repro.core import chaos as chaosmod
 from repro.core import policies as policy_zoo
 
 # user-facing objective name -> core.solver/oracle internal name
@@ -69,6 +70,11 @@ class SweepSpec:
     arrival_coflows: int = 5          # co-flows per trace
     arrival_mean_s: float = 2.0       # mean inter-arrival gap, seconds
     epoch_s: float | None = None      # re-plan period (None = 4 slots)
+    # chaos presets (core.chaos.PRESETS names); per preset each seed
+    # replays a deterministic failure/repair event trace under a
+    # rolling-horizon poisson run (mid-run degradation, stranded-flow
+    # recovery, deferred-by-failure accounting — see docs/CHAOS.md)
+    chaos: tuple[str, ...] = ()
     total_gbits: float = 30.0
     n_map: int = 10
     n_reduce: int = 6
@@ -131,6 +137,10 @@ class SweepSpec:
             if fam not in arrivals.FAMILIES:
                 raise ValueError(f"unknown arrival family {fam!r}; "
                                  f"have {sorted(arrivals.FAMILIES)}")
+        for cz in self.chaos:
+            if cz not in chaosmod.PRESETS:
+                raise ValueError(f"unknown chaos preset {cz!r}; "
+                                 f"have {sorted(chaosmod.PRESETS)}")
         for pol in self.policies:
             if pol not in policy_zoo.POLICIES:
                 raise ValueError(f"unknown policy {pol!r}; "
@@ -193,6 +203,17 @@ class SweepRecord:
     # placement; the winning baseline row reads 1.0 by construction
     placement_search: str = "none"
     placement_gain: float = 1.0
+    # chaos-replay rows (core.chaos event traces over a rolling-horizon
+    # run); chaos == "none" marks a healthy row.  availability is the
+    # trace-exact fraction of the run with full admissible capacity;
+    # recover_s is the mean time-to-recover over the row's episodes
+    # (NaN when no failure ever stranded or deferred demand);
+    # deferred_gbits is demand still deferred-by-failure at exit
+    chaos: str = "none"
+    availability: float = 1.0
+    stranded_gbits: float = 0.0
+    recover_s: float = float("nan")
+    deferred_gbits: float = 0.0
 
     @property
     def primary(self) -> float:
@@ -453,6 +474,49 @@ def _arrival_record(topo_name, obj, pat_name, seed, fam: str,
         warm_iterations=res.warm_iterations)
 
 
+def _solve_chaos_cell(topo, pat, preset: str, internal_obj: str,
+                      spec: SweepSpec, seed: int):
+    """One chaos-replay cell: a deterministic poisson arrival trace run
+    through the rolling-horizon driver while a seeded failure/repair
+    event trace (core.chaos) degrades and repairs the fabric at epoch
+    boundaries.  The hardened retry ladder ends in the certified "scf"
+    fallback tier; unroutable demand parks as deferred-by-failure."""
+    aspec = arrivals.ArrivalSpec(family="poisson",
+                                 n_coflows=spec.arrival_coflows,
+                                 mean_interarrival_s=spec.arrival_mean_s)
+    trace = arrivals.generate_trace(topo, pat, aspec, int(seed))
+    events = chaosmod.generate_preset_events(topo, (preset,), int(seed))
+    t0 = time.perf_counter()
+    res = arrivals.run_online(topo, trace, internal_obj,
+                              epoch_s=spec.epoch_s, rho=spec.rho,
+                              path_slack=spec.path_slack, iters=spec.iters,
+                              tol=spec.tol, backend=spec.backend,
+                              chaos=events, fallback_policy="scf")
+    return trace, res, time.perf_counter() - t0
+
+
+def _chaos_record(topo_name, obj, pat_name, seed, preset: str,
+                  trace: list, res, wall_s: float,
+                  backend: str) -> SweepRecord:
+    """One SweepRecord summarizing a chaos replay (an arrival row plus
+    the robustness columns)."""
+    rec = _arrival_record(topo_name, obj, pat_name, seed, "poisson",
+                          trace, res, wall_s, backend)
+    rec.chaos = preset
+    rec.availability = res.availability
+    rec.stranded_gbits = res.stranded_gbits
+    rec.deferred_gbits = res.deferred_failure_gbits
+    rec.recover_s = (float(np.mean(res.recoveries)) if res.recoveries
+                     else float("nan"))
+    # backlog excludes deferred-by-failure demand (it was never
+    # routable); survivability measures what the fabric allowed
+    offered = float(sum(a.coflow.total_gbits for a in trace))
+    rec.survivability = ((offered - res.backlog_gbits
+                          - res.deferred_failure_gbits)
+                         / max(offered, 1e-12))
+    return rec
+
+
 def _record(topo_name, obj, pat_name, seed, p, r, per_inst_s, *,
             offered: float, failure: str = "none",
             degradation_ratio: float = 0.0,
@@ -491,7 +555,7 @@ def run_sweep(spec: SweepSpec, *, log: Callable[[str], None] | None = None
         # the per-cell loop instead of rebuilding an empty problem per row
         placeholder = (timeslot.ScheduleProblem(
             topo, traffic.empty_coflow(topo.n_vertices), n_slots=2,
-            rho=spec.rho) if spec.arrivals else None)
+            rho=spec.rho) if (spec.arrivals or spec.chaos) else None)
         for pat_name in spec.patterns:
             pat = traffic.pattern(pat_name, n_map=spec.n_map,
                                   n_reduce=spec.n_reduce,
@@ -584,6 +648,31 @@ def run_sweep(spec: SweepSpec, *, log: Callable[[str], None] | None = None
                         _profile_line(
                             say, f"{topo_name}/{pat_name}/min-{obj}~{fam}",
                             snap, time.perf_counter() - t_cell)
+                for preset in spec.chaos:
+                    cz_recs = []
+                    snap = solver.build_cache_stats().snapshot()
+                    t_cell = time.perf_counter()
+                    for seed in spec.seeds:
+                        trace, res, wall = _solve_chaos_cell(
+                            topo, pat, preset, OBJECTIVES[obj], spec, seed)
+                        rec = _chaos_record(topo_name, obj, pat_name,
+                                            seed, preset, trace, res,
+                                            wall, spec.backend)
+                        cz_recs.append(rec)
+                        records.append(rec)
+                        problems.append(placeholder)
+                    recov = [r.recover_s for r in cz_recs
+                             if np.isfinite(r.recover_s)]
+                    say(f"{topo_name:10s} {pat_name:8s} min-{obj:10s} "
+                        f"!{preset:9s} "
+                        f"avail={np.mean([r.availability for r in cz_recs]):6.1%}  "
+                        f"strand={np.mean([r.stranded_gbits for r in cz_recs]):5.2f} Gbit  "
+                        f"ttr={np.mean(recov) if recov else float('nan'):5.2f} s")
+                    if spec.profile:
+                        _profile_line(
+                            say, f"{topo_name}/{pat_name}/min-{obj}"
+                                 f"!{preset}", snap,
+                            time.perf_counter() - t_cell)
         # placement-search cells hang off topology x objective (the
         # pattern axis is exactly what the search optimizes over)
         for obj in spec.objectives:

@@ -164,6 +164,7 @@ def test_pon_multicell_single_cell_matches_pon3_shape():
 @pytest.mark.parametrize("name,kw", [
     ("dcell-multi", dict(n=2, levels=2)),
     ("pon-multicell", dict(n_cells=2, n_racks=2, servers_per_rack=2)),
+    ("pon-cascaded", dict(n_cells=2, n_racks=2, servers_per_rack=2)),
 ])
 @pytest.mark.parametrize("backend", ["xla", "pallas"])
 def test_new_families_solve_and_certify(name, kw, backend):
@@ -179,3 +180,69 @@ def test_new_families_solve_and_certify(name, kw, backend):
     assert cert.ok, cert
     assert r.metrics.feasible
     assert r.remaining_gbits < 1e-6
+
+
+@pytest.mark.parametrize("n_cells,n_racks,spr", [(2, 4, 2), (2, 2, 2),
+                                                 (3, 3, 2), (4, 2, 1)])
+def test_pon_cascaded_counts(n_cells, n_racks, spr):
+    t = topology.pon_cascaded(n_cells, n_racks, spr)
+    G = n_racks + 1
+    assert len(t.servers) == n_cells * n_racks * spr
+    # per cell: OLT card + racks*(backplane + 2 AWGR ports + servers)
+    # + the card's stage-1 port pair + its cascade port pair
+    assert t.n_vertices == n_cells * (1 + n_racks * (3 + spr) + 2 + 2)
+    e_cell = n_racks * spr * 4 + 2 + G * (G - 1) + 2
+    assert t.n_edges == n_cells * e_cell + n_cells * (n_cells - 1)
+    assert t.n_wavelengths == max(n_racks, n_cells - 1)
+    # every stage-1 ingress plus one cascade ingress per cell
+    assert len(t.awgr_in_ports) == n_cells * (G + 1)
+    assert not t.server_relay and t.one_wavelength_tx
+    assert t.task_servers == t.servers
+    # both passive stages are zero-power: only OLT cards + backplanes bill
+    import numpy as np
+    passive = [d for d in t.devices if d.kind == topology.KIND_PASSIVE]
+    assert all(d.p_max == 0.0 for d in passive)
+    assert t.static_power() == n_cells * (
+        topology.O_OLT + n_racks * topology.O_BACKPLANE
+        + n_racks * spr * topology.P_TUNABLE)
+
+
+def test_pon_cascaded_stage2_is_latin_square():
+    import numpy as np
+    n_cells = 3
+    t = topology.pon_cascaded(n_cells, 2, 1)
+    names = [d.name for d in t.devices]
+    cin = [names.index(f"cas_in{c}") for c in range(n_cells)]
+    cout = [names.index(f"cas_out{c}") for c in range(n_cells)]
+    lam2 = topology.awgr_lambda(n_cells)
+    seen = {}
+    for e, (u, v) in enumerate(t.edges):
+        if int(u) in cin and int(v) in cout:
+            c, c2 = cin.index(int(u)), cout.index(int(v))
+            ws = np.flatnonzero(t.cap[e] > 0)
+            # each stage-2 path carries exactly the cyclic-table wavelength
+            assert ws.tolist() == [int(lam2[c, c2])]
+            assert t.cap[e, ws[0]] == topology.LINK_GBPS
+            seen[(c, c2)] = int(lam2[c, c2])
+    assert len(seen) == n_cells * (n_cells - 1)
+
+
+def test_pon_cascaded_requires_two_cells():
+    with pytest.raises(ValueError):
+        topology.pon_cascaded(1)
+
+
+def test_pon_cascaded_cross_cell_routable():
+    """Every server pair — including cross-cell through both passive
+    AWGR stages — must have an admissible wavelength-continuous route."""
+    import numpy as np
+    from repro.core import failures, timeslot, traffic
+
+    t = topology.pon_cascaded(2, 2, 2)
+    srvs = t.servers
+    src, dst = zip(*[(a, b) for a in srvs for b in srvs if a != b])
+    cf = traffic.CoflowSet(np.array(src), np.array(dst),
+                           np.ones(len(src)), t.n_vertices)
+    p = timeslot.ScheduleProblem(t, cf,
+                                 n_slots=timeslot.suggest_n_slots(t, cf))
+    assert failures.routable_flows(p).all()

@@ -192,3 +192,58 @@ def test_sweep_rejects_unknown_failure(bad):
     spec = SweepSpec(topos=("spine-leaf",), failures=(bad,))
     with pytest.raises(ValueError, match="failure preset"):
         spec.validate()
+
+
+# ---------------------------------------------------------------------------
+# repair: exact inverse of apply (the chaos engine's core invariant)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("preset", PRESETS)
+def test_repair_round_trip_bit_identical(preset):
+    topo = topology.build("spine-leaf")
+    scen = failures.sample(topo, preset, seed=3)
+    degraded = failures.apply(topo, scen)
+    assert degraded.cap.sum() < topo.cap.sum()
+    restored = failures.repair(degraded, scen, topo)
+    # bit-identical, not approximately equal: same capacity bytes, so
+    # the repaired fabric hits the same solver structure-cache entry
+    assert restored.cap.tobytes() == topo.cap.tobytes()
+    assert restored.name == topo.name
+    cf = traffic.shuffle_traffic(topo, 8.0, n_map=4, n_reduce=3, seed=2)
+    n = timeslot.suggest_n_slots(topo, cf)
+    p_h = timeslot.ScheduleProblem(topo, cf, n_slots=n, path_slack=2)
+    p_r = timeslot.ScheduleProblem(restored, cf, n_slots=n, path_slack=2)
+    assert solver._structure_key(p_h, "energy") \
+        == solver._structure_key(p_r, "energy")
+
+
+def test_repair_rejects_wrong_degraded_state():
+    topo = topology.build("spine-leaf")
+    scen = failures.sample(topo, "link1", seed=3)
+    other = failures.apply(topo, failures.sample(topo, "switch", seed=5))
+    with pytest.raises(ValueError, match="not apply"):
+        failures.repair(other, scen, topo)
+
+
+def test_affected_rows_is_the_support_of_apply():
+    topo = topology.build("spine-leaf")
+    for preset in PRESETS:
+        scen = failures.sample(topo, preset, seed=1)
+        rows = failures.affected_rows(topo, scen)
+        changed = np.any(failures.apply(topo, scen).cap != topo.cap,
+                         axis=tuple(range(1, topo.cap.ndim)))
+        # every changed row is inside the declared support
+        assert not np.any(changed & ~rows), preset
+
+
+def test_compose_matches_sequential_application_pattern():
+    """Applying the composition of two cut scenarios zeroes exactly the
+    union of their supports (the replay invariant FabricState relies
+    on: active-set composition over the pristine topology)."""
+    topo = topology.build("spine-leaf")
+    a = failures.sample(topo, "link1", seed=0)
+    b = failures.sample(topo, "switch", seed=1)
+    both = failures.apply(topo, failures.compose([a, b]))
+    rows = failures.affected_rows(topo, a) | failures.affected_rows(topo, b)
+    assert np.all(both.cap[rows] == 0.0)
+    assert np.array_equal(both.cap[~rows], topo.cap[~rows])
